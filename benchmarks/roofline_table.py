@@ -1,0 +1,52 @@
+"""Assemble the §Roofline table from the dry-run JSON results."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+COLS = ("t_compute_s", "t_memory_s", "t_collective_s")
+
+
+def load(mesh: str = "16x16", step: str = "fl"):
+    rows = []
+    for fn in sorted(RESULTS.glob(f"*__{mesh}__{step}.json")):
+        d = json.loads(fn.read_text())
+        rows.append(d)
+    return rows
+
+
+def fmt_ms(x):
+    return f"{x * 1e3:9.1f}"
+
+
+def table(mesh: str = "16x16", step: str = "fl") -> str:
+    rows = load(mesh, step)
+    out = [f"### Mesh {mesh} (step={step})\n",
+           "| arch | shape | fit | t_comp ms | t_mem ms | t_coll ms | "
+           "bound | useful | roofline-MFU |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | "
+            f"{'Y' if d.get('fits_hbm') else 'N'} | "
+            f"{fmt_ms(r['t_compute_s'])} | {fmt_ms(r['t_memory_s'])} | "
+            f"{fmt_ms(r['t_collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_mfu']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if rows:
+            print(table(mesh))
+            print()
+            n_fit = sum(1 for d in rows if d.get("fits_hbm"))
+            print(f"{len(rows)} pairs compiled on {mesh}; {n_fit} fit HBM\n")
+
+
+if __name__ == "__main__":
+    main()

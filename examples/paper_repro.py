@@ -1,0 +1,16 @@
+"""Full reproduction of the paper's experiments (Figs. 2-3).
+
+Defaults to the reduced-faithful configuration (minutes on CPU); pass
+``--full`` for the paper's exact scale: N=100, K=40, M=7850 logistic
+regression, T=500 rounds, 5 seeds.
+
+    PYTHONPATH=src python examples/paper_repro.py [--full]
+"""
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root
+
+from benchmarks.paper_figs import main  # noqa: E402
+
+if __name__ == "__main__":
+    main(full="--full" in sys.argv)

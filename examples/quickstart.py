@@ -1,0 +1,41 @@
+"""Quickstart: CA-AFL vs AFL in 60 seconds on CPU.
+
+Runs the paper's Algorithm 1 (N=20 clients, logistic regression, sorted-label
+shards) against the non-channel-aware AFL baseline and prints the
+energy/robustness trade-off the paper is about.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.base import FLConfig
+from repro.core.simulator import run_simulation
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+
+def main():
+    x, y, xt, yt = make_fmnist_like(num_train=2000, num_test=500, dim=64)
+    data = (*sorted_label_shards(x, y, 20), )
+    xts, yts = sorted_label_shards(xt, yt, 20)
+    data = (data[0], data[1], xts, yts)
+    model = logistic_regression(dim=64, num_classes=10)
+
+    print(f"{'method':12s} {'avg_acc':>8s} {'worst_acc':>10s} "
+          f"{'std':>6s} {'energy (J)':>12s}")
+    for name, method, c in (("AFL", "afl", 0.0),
+                            ("CA-AFL C=2", "ca_afl", 2.0),
+                            ("CA-AFL C=8", "ca_afl", 8.0),
+                            ("greedy", "greedy", 0.0)):
+        fl = FLConfig(num_clients=20, clients_per_round=8, rounds=60,
+                      batch_size=20, lr0=0.3, lr_decay=0.995,
+                      ascent_lr=2e-2, method=method, energy_C=c)
+        h = run_simulation(model, fl, data)
+        print(f"{name:12s} {float(h.avg_acc[-1]):8.3f} "
+              f"{float(h.worst_acc[-1]):10.3f} {float(h.std_acc[-1]):6.3f} "
+              f"{float(h.energy[-1]):12.3e}")
+    print("\nCA-AFL trades a sliver of worst-client accuracy for a large "
+          "energy saving; C interpolates AFL -> greedy (Props. 1-2).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: federated training of a ~100M-parameter qwen2-family
+model with CA-AFL selection, over-the-air aggregation and the energy ledger —
+the production tier at a scale a CPU container can actually run.
+
+~100M params: 12 layers, d_model=512, d_ff=2048, vocab 32k (padded). Eight
+clients with heterogeneous synthetic corpora; the jit'd FL round is the same
+code the multi-pod dry-run lowers at 34B/235B scale.
+
+    PYTHONPATH=src python examples/train_federated_100m.py --rounds 200
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_lm_tokens
+from repro.federated.server import ParameterServer
+from repro.launch.train import lm_batches
+from repro.models.api import build_model
+from repro.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--C", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-0.5b").with_(
+        num_layers=12, d_model=512, num_heads=8, num_kv_heads=2, d_ff=2048,
+        vocab_size=32000, dtype="float32", remat=False, window=None)
+    model = build_model(cfg)
+    fl = FLConfig(num_clients=args.clients, clients_per_round=args.k,
+                  rounds=args.rounds, method="ca_afl", energy_C=args.C,
+                  noise_std=1e-3, seed=args.seed)
+    ps = ParameterServer(model, sgd(0.3), fl, seed=args.seed)
+    state = ps.init_state(jax.random.PRNGKey(args.seed))
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(state.params))
+    print(f"model: qwen2-family reduced, {n:,} params "
+          f"(~{n / 1e6:.0f}M); N={args.clients} K={args.k} C={args.C}")
+
+    corpus = make_lm_tokens(args.clients, 16 * args.seq, cfg.vocab_size,
+                            seed=args.seed)
+    t0 = time.time()
+    state = ps.run(state, lm_batches(corpus, 2, args.seq, cfg, args.seed),
+                   rounds=args.rounds,
+                   log_every=max(args.rounds // 20, 1))
+    dt = time.time() - t0
+    losses = [h["loss"] for h in state.history]
+    print(f"\n{args.rounds} rounds in {dt / 60:.1f} min "
+          f"({dt / args.rounds:.2f} s/round)")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(drop {losses[0] - losses[-1]:.3f})")
+    lam = state.lam
+    nz = lam[lam > 0]
+    print(f"uplink energy: {state.energy_joules:.3e} J; "
+          f"lambda: max={float(lam.max()):.3f}, "
+          f"{int((lam == 0).sum())} clients projected to 0")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""msgpack + numpy pytree checkpointing (no external ckpt deps).
+
+Layout: <dir>/step_<n>.msgpack, each a msgpack map {flat_key: {dtype, shape,
+raw bytes}} plus the treedef recovered from a template at restore time.
+Keeps `keep` most recent checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+_KEY_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _KEY_SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        flat[key] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:010d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_flatten(tree)))
+    os.replace(tmp, path)  # atomic
+    # retention
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(directory, f"step_{s:010d}.msgpack"))
+    return path
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for fn in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.msgpack", fn)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of `template` (shapes/dtypes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}.msgpack")
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read())
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_with_path:
+        key = _KEY_SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        rec = flat[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,66 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``.
+
+Arch ids match the assignment exactly (``--arch <id>`` on all launchers).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES, FLConfig
+
+_MODULES: Dict[str, str] = {
+    "granite-34b": "granite_34b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-7b": "qwen2_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "fmnist-logreg": "fmnist_logreg",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "fmnist-logreg"]
+
+# (arch, shape) pairs that are skipped, with the reason recorded in DESIGN.md.
+SHAPE_SKIPS = {
+    ("seamless-m4t-medium", "long_500k"):
+        "enc-dec speech model: no meaningful 524k-token autoregressive decode",
+}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def get_shape(shape: str) -> InputShape:
+    return INPUT_SHAPES[shape]
+
+
+def all_pairs(include_skipped: bool = False):
+    """Every (arch, shape) pair in the assignment, minus documented skips."""
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            if not include_skipped and (arch, shape) in SHAPE_SKIPS:
+                continue
+            yield arch, shape
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "FLConfig",
+    "ASSIGNED_ARCHS", "SHAPE_SKIPS",
+    "get_config", "get_reduced", "get_shape", "all_pairs",
+]

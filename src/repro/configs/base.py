@@ -1,0 +1,126 @@
+"""Config dataclasses for model architectures, input shapes and FL runs.
+
+Every assigned architecture gets one module in this package defining a
+``CONFIG`` (full production scale, exercised only via the dry-run) and a
+``reduced()`` smoke variant (<=2 layers, d_model<=512, <=4 experts) that runs
+a real forward/train step on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str  # citation bracket from the assignment
+
+    # transformer backbone
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # sliding-window attention variant (used for long_500k on attention archs)
+    window: Optional[int] = None
+    # serving uses the rolling window cache only at/beyond this many positions
+    # (decode_32k stays exact full-attention; long_500k goes sub-quadratic)
+    long_context_threshold: int = 131072
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_aux_coef: float = 1e-2
+    moe_capacity_factor: float = 1.25  # tokens/expert cap = S*k*cf/E
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # hybrid (zamba2): one *shared* attention block applied every k ssm layers
+    shared_attn_every: int = 0
+
+    # xLSTM: one sLSTM block per `slstm_group` layers (rest mLSTM)
+    slstm_group: int = 0
+
+    # VLM: a cross-attention (image) layer every k self-attn layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 1601  # ViT patch-embedding count (stubbed frontend)
+
+    # audio / encoder-decoder
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    num_audio_frames: int = 1024  # stubbed conv-codec frontend output length
+
+    # numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "audio"
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm" or self.name.startswith("zamba")
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning run configuration (paper's Section IV defaults)."""
+
+    num_clients: int = 100          # N
+    clients_per_round: int = 40     # K
+    rounds: int = 500               # T
+    batch_size: int = 50
+    lr0: float = 0.1                # eta^(0)
+    lr_decay: float = 0.998
+    ascent_lr: float = 8e-3         # gamma
+    energy_C: float = 8.0           # energy-conservation tuning factor C
+    local_steps: int = 1
+    # channel / physical layer
+    num_subcarriers: int = 64       # N_sc
+    flat_fading: bool = True        # paper §IV-A: flat-fading channel block
+    channel_floor: float = 0.05     # truncation h >= 0.05
+    psi: float = 0.5e-3             # scaling factor psi = 0.5 mW
+    tau: float = 1e-3               # symbol period (LTE, 1 ms)
+    noise_std: float = 0.0          # AWGN std on the aggregated signal (eq. 10)
+    method: str = "ca_afl"          # ca_afl | afl | fedavg | greedy | gca
+    seed: int = 0

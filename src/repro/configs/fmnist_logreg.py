@@ -1,0 +1,19 @@
+"""The paper's own model: logistic regression on Fashion-MNIST, M = 7850.
+
+784-dim inputs, 10 classes -> 784*10 + 10 = 7850 parameters, exactly the M
+used in the paper's energy model (Section IV-A).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="fmnist-logreg",
+    family="logreg",
+    source="paper §IV-A",
+    d_model=784,
+    vocab_size=10,  # num classes
+    dtype="float32",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG

@@ -1,0 +1,53 @@
+"""Over-the-air (AirComp) model aggregation (paper eqs. 1 and 10).
+
+With channel-inversion power control, each selected client pre-scales its
+analog symbols by 1/h so the superposed signal received by the PS is the plain
+sum of the K transmitted models plus receiver noise:
+
+    w̄^(t+1) = ( Σ_{i∈D} w_i^(t+1) + z^(t) ) / K            (eq. 10)
+
+On TPU the multiple-access superposition maps onto the ICI all-reduce; the
+AWGN z is injected from a PRNG key to preserve the algorithm's statistics
+(DESIGN.md §2). Both a stacked-tensor form (simulator tier) and a pytree form
+(production tier) are provided. The Pallas kernel in
+``repro.kernels.aircomp`` implements the fused stacked form for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_size
+
+
+def aircomp_aggregate(
+    stacked: jnp.ndarray,
+    mask: jnp.ndarray,
+    key,
+    noise_std: float = 0.0,
+    k: float | jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Aggregate stacked per-client tensors [N, ...] under participation mask.
+
+    Returns (Σ_i mask_i·x_i + z)/K where K defaults to Σ mask (the paper uses
+    the fixed K since the selected set always has size K).
+    """
+    if k is None:
+        k = jnp.sum(mask)
+    mshape = (-1,) + (1,) * (stacked.ndim - 1)
+    summed = jnp.sum(stacked * mask.reshape(mshape), axis=0)
+    if noise_std:
+        summed = summed + noise_std * jax.random.normal(key, summed.shape, summed.dtype)
+    return summed / k
+
+
+def aircomp_aggregate_tree(trees, mask, key, noise_std: float = 0.0, k=None):
+    """Pytree form: `trees` has leading client axis N on every leaf."""
+    if k is None:
+        k = jnp.sum(mask)
+    leaves, treedef = jax.tree_util.tree_flatten(trees)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, kk in zip(leaves, keys):
+        out.append(aircomp_aggregate(leaf, mask, kk, noise_std, k))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,50 @@
+"""Wireless channel model (paper §II and §IV-A).
+
+i.i.d. block flat-fading Rayleigh channel h ~ CN(0, 1) per sub-carrier,
+truncated at |h| >= 0.05, coherent for exactly one communication round (the
+paper's most challenging scenario). The effective channel collapses the
+per-sub-carrier channel-inversion powers by the harmonic mean (eq. 6):
+
+    1/|h_i|^2 = (1/N_sc) * sum_b 1/|h_{i,b}|^2
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def draw_channels(
+    key,
+    num_clients: int,
+    num_subcarriers: int,
+    floor: float = 0.05,
+    flat: bool = True,
+):
+    """Draw |h_{i,b}| magnitudes, shape [num_clients, num_subcarriers].
+
+    |CN(0,1)| is Rayleigh with sigma = 1/sqrt(2) (unit mean-square). The
+    truncation h >= floor is applied by clipping; the clipped mass is
+    P(|h| < 0.05) = 1 - exp(-0.0025) ~= 0.25%, statistically negligible
+    (documented deviation from resampling-style truncation).
+
+    flat=True is the paper's §IV-A setting ("flat-fading Rayleigh channel
+    block"): one coefficient per client per coherence block, identical across
+    sub-carriers — eq. (6) then reduces to |h_i|. flat=False gives an
+    independent frequency-selective draw per sub-carrier (ablation; the
+    harmonic mean concentrates and the client-to-client energy spread —
+    hence the achievable savings — shrinks).
+    """
+    draw_sc = 1 if flat else num_subcarriers
+    re, im = jax.random.normal(key, (2, num_clients, draw_sc)) / jnp.sqrt(2.0)
+    mag = jnp.sqrt(re**2 + im**2)
+    mag = jnp.broadcast_to(mag, (num_clients, num_subcarriers)) if flat else mag
+    return jnp.maximum(mag, floor)
+
+
+def effective_channel(h_mag: jnp.ndarray) -> jnp.ndarray:
+    """Effective channel |h_i| per eq. (6): sqrt of the harmonic mean of |h_b|^2.
+
+    h_mag: [..., num_subcarriers] -> [...]
+    """
+    inv_sq = jnp.mean(1.0 / jnp.square(h_mag), axis=-1)
+    return 1.0 / jnp.sqrt(inv_sq)

@@ -1,0 +1,40 @@
+"""Distributionally-robust min-max machinery (paper P1 + Alg. 1 lines 10-15).
+
+The ascent step updates the simplex weights with stochastic per-client losses
+on K uniformly sampled clients, then projects back onto the simplex:
+
+    λ~_i = λ_i + γ f_i(w̄; ξ~_i)   for i in U^(t)
+    λ    = Π_Δ(λ~)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def project_simplex(v: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean projection of v onto the probability simplex (sort-based,
+    Held-Wolfe-Crowder / Duchi et al. algorithm; O(N log N))."""
+    n = v.shape[0]
+    u = jnp.sort(v)[::-1]
+    css = jnp.cumsum(u)
+    k = jnp.arange(1, n + 1, dtype=v.dtype)
+    cond = u + (1.0 - css) / k > 0
+    rho = jnp.max(jnp.where(cond, k, 0.0))
+    theta = (jnp.sum(jnp.where(cond, u, 0.0)) - 1.0) / rho
+    return jnp.maximum(v - theta, 0.0)
+
+
+def lambda_ascent(
+    lam: jnp.ndarray,
+    losses: jnp.ndarray,
+    ascent_mask: jnp.ndarray,
+    gamma: float,
+) -> jnp.ndarray:
+    """One ascent step of Alg. 1: update entries in U^(t), project to simplex.
+
+    losses: [N] per-client stochastic losses f_i(w̄; ξ~) (only entries where
+    ascent_mask==1 are used).
+    """
+    lam_tilde = lam + gamma * ascent_mask * losses
+    return project_simplex(lam_tilde)

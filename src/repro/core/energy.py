@@ -1,0 +1,25 @@
+"""Uplink energy model (paper eqs. 3-6).
+
+E_i^(t)  = P_i^(t) * t_trans,      t_trans = (M / N_sc) * tau
+P~_i^(t) = psi * N_sc / |h_i|^2    (channel-inversion power, eq. 5)
+E~_i^(t) = psi * M * tau / |h_i|^2 (scaling+inversion energy per upload)
+
+Only the channel-inversion component enters scheduling (the symbol power
+reflects the learning procedure and is excluded, per the paper).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def transmit_energy(h_eff: jnp.ndarray, model_size: int, psi: float, tau: float):
+    """Per-client upload energy E~_i (Joules); h_eff: [...] effective channels."""
+    return psi * model_size * tau / jnp.square(h_eff)
+
+
+def round_energy(h_eff, mask, model_size: int, psi: float, tau: float):
+    """Cumulative energy of the selected set D^(t): E^(t) = sum_{i in D} E~_i.
+
+    mask: [N] 0/1 participation indicator.
+    """
+    return jnp.sum(mask * transmit_energy(h_eff, model_size, psi, tau))

@@ -1,0 +1,39 @@
+"""Product-of-experts client-selection PMF (paper Prop. 1 + eqs. 7-9).
+
+Two "experts" (PMFs over the N clients):
+  - energy expert  y_i ∝ |h_i|^C   (Prop. 1; C = energy-conservation factor)
+  - robustness expert = the AFL simplex weights λ_i
+combined by the PoE rule (eq. 8):
+
+    ρ_i = λ_i · y_i / Σ_j λ_j · y_j  =  λ_i |h_i|^C / Σ_j λ_j |h_j|^C   (eq. 9)
+
+All computations are done in log space (a softmax over C·log|h| + log λ) so
+that C up to hundreds stays finite; at C→∞ the PMF provably collapses onto the
+argmax channel (Prop. 2), which the log-space form reproduces exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def energy_expert_pmf(h_eff: jnp.ndarray, C: float) -> jnp.ndarray:
+    """y_i = |h_i|^C / Σ_j |h_j|^C, computed as softmax(C log|h|)."""
+    logits = C * jnp.log(h_eff)
+    return jax.nn.softmax(logits)
+
+
+def product_of_experts(*pmfs: jnp.ndarray) -> jnp.ndarray:
+    """Normalized elementwise product of expert PMFs (Hinton-style PoE)."""
+    log_p = sum(jnp.log(jnp.clip(p, 1e-38)) for p in pmfs)
+    return jax.nn.softmax(log_p)
+
+
+def ca_afl_logits(lam: jnp.ndarray, h_eff: jnp.ndarray, C: float) -> jnp.ndarray:
+    """log(λ_i) + C·log|h_i| — unnormalized log of eq. (9)."""
+    return jnp.log(jnp.clip(lam, 1e-38)) + C * jnp.log(h_eff)
+
+
+def ca_afl_pmf(lam: jnp.ndarray, h_eff: jnp.ndarray, C: float) -> jnp.ndarray:
+    """ρ^(t) of eq. (9)."""
+    return jax.nn.softmax(ca_afl_logits(lam, h_eff, C))

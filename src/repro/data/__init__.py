@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_fmnist_like, make_lm_tokens
+from repro.data.pipeline import ClientDataset, client_batch_iterator

@@ -1,0 +1,4 @@
+from repro.federated.partition import sorted_label_shards, dirichlet_partition, iid_partition
+from repro.federated.client import client_weights
+from repro.federated.rounds import make_fl_round, per_client_losses, FLRoundMetrics
+from repro.federated.server import ParameterServer, ServerState

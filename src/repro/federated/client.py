@@ -1,0 +1,32 @@
+"""Client-side local update (production tier).
+
+A "client" at production scale is one slice of the mesh ``data`` axis: its
+local batch lives on its devices and its local gradient is computed there.
+The per-client weighting that realizes CA-AFL's selection (and AirComp's /K)
+is folded into the loss as per-example weights, so the data-axis gradient
+reduction GSPMD inserts *is* the over-the-air aggregation (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def client_weights(mask: jnp.ndarray, clients_per_example: jnp.ndarray,
+                   k: float) -> jnp.ndarray:
+    """Per-example weights realizing (1/K)·Σ_{i∈D} grad_i under a global mean.
+
+    mask: [N] 0/1 selection; clients_per_example: [B] client id of each
+    example. The loss is a *mean* over B examples, so each selected client's
+    contribution must be re-scaled by B/(B_i·K) where B_i = B/N examples per
+    client. weights[b] = mask[client[b]] * N / K.
+    """
+    n = mask.shape[0]
+    return mask[clients_per_example] * (n / k)
+
+
+def local_loss(model, params, batch, ctx=None):
+    """Weighted local loss — grads of this are the superposed update."""
+    return model.loss_fn(params, batch, ctx)

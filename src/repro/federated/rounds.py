@@ -1,0 +1,196 @@
+"""The jit'd production FL round: CA-AFL at model scale.
+
+One round = one compiled function on the mesh:
+
+  1. every client (= slice of the ``data`` axis) computes its local gradient
+     on its local batch;
+  2. per-example weights (selection mask × N/K) scale each client's
+     contribution, so the gradient reduction GSPMD inserts over ``data`` IS
+     the over-the-air superposition of eq. (10) — AWGN z/K is injected into
+     the aggregated update from a PRNG key;
+  3. the server optimizer applies the aggregated update (plain SGD = the
+     paper's model-averaging for one local step; AdamW is the beyond-paper
+     server-optimizer option);
+  4. per-client mean losses come back for the λ-ascent (the paper's "control
+     channel" scalars).
+
+Selection, λ bookkeeping, channel draws and the energy ledger are host-side
+in ``server.py`` — O(N) scalars, exactly the paper's control-channel split.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.federated.client import client_weights
+from repro.optim import apply_updates
+
+
+class FLRoundMetrics(NamedTuple):
+    loss: jnp.ndarray            # weighted global loss (selected set)
+    client_losses: jnp.ndarray   # [N] per-client mean loss (control channel)
+    grad_norm: jnp.ndarray
+
+
+def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
+                  noise_std: float = 0.0, ctx=None, microbatches: int = 1,
+                  fused_probe: bool = False):
+    """Returns round_fn(params, opt_state, batch, mask, key) -> (params,
+    opt_state, FLRoundMetrics).
+
+    batch must carry "client_ids" [B] mapping each example to its client.
+    ``microbatches`` > 1 runs gradient accumulation: the global batch is
+    scanned in B/microbatches slices, dividing activation memory by the same
+    factor at no recompute cost (each client's rows must be contiguous so
+    every slice still covers all clients).
+
+    ``fused_probe`` (BEYOND-PAPER optimization, recorded in EXPERIMENTS.md
+    §Perf): per-client losses for the λ-ascent come out of the *descent*
+    forward (evaluated at w^t) instead of a second forward at w^{t+1} —
+    Alg. 1 line 12 becomes one-round stale, removing ~1/3 of the round's
+    compute and HBM traffic. The simulator validates that training curves
+    are indistinguishable (tests/test_perf_variants.py).
+    """
+
+    def weighted_loss_and_perex(p, b, mask):
+        w = client_weights(mask, b["client_ids"], float(clients_per_round))
+        if fused_probe:
+            # one forward yields BOTH the weighted scalar and per-ex NLL
+            per_ex = _per_example_nll(model, p, b, ctx)
+            return jnp.mean(per_ex * w), per_ex
+        b = dict(b)
+        b["weights"] = w
+        return model.loss_fn(p, b, ctx), jnp.zeros((w.shape[0],))
+
+    def round_fn(params, opt_state, batch, mask, key):
+        cids = batch["client_ids"]
+
+        if microbatches == 1:
+            (loss, per_ex), grads = jax.value_and_grad(
+                lambda p: weighted_loss_and_perex(p, batch, mask),
+                has_aux=True)(params)
+        else:
+            bsz = cids.shape[0]
+            assert bsz % microbatches == 0
+            mb = {k: v.reshape((microbatches, bsz // microbatches)
+                               + v.shape[1:])
+                  for k, v in batch.items()}
+
+            def acc_step(carry, mslice):
+                loss_a, grads_a = carry
+                (l, pe), g = jax.value_and_grad(
+                    lambda p: weighted_loss_and_perex(p, mslice, mask),
+                    has_aux=True)(params)
+                return (loss_a + l / microbatches,
+                        jax.tree.map(lambda a, b_: a + b_ / microbatches,
+                                     grads_a, g)), pe
+
+            # accumulate in param dtype: an f32 accumulator would cost an
+            # extra 2x params bytes per device at 235B scale (documented
+            # precision trade-off; each term is pre-divided by microbatches)
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 params))
+            (loss, grads), per_mb = jax.lax.scan(acc_step, zero, mb)
+            per_ex = per_mb.reshape(-1)
+
+        # --- AirComp receiver noise: z^(t)/K on the aggregated update ------
+        if noise_std:
+            grads = add_awgn(grads, key, noise_std / clients_per_round)
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+
+        # --- control channel: per-client mean losses for the λ-ascent ------
+        if fused_probe:
+            # beyond-paper: stale (w^t) losses from the descent forward
+            ones = jnp.ones_like(per_ex)
+            sums = jnp.zeros((num_clients,), per_ex.dtype).at[cids].add(per_ex)
+            cnts = jnp.zeros((num_clients,), per_ex.dtype).at[cids].add(ones)
+            client_losses = sums / jnp.maximum(cnts, 1.0)
+        else:
+            # paper-faithful: a second forward on the NEW model — exactly
+            # Alg. 1 line 12, which evaluates f_i(w̄^{t+1}) on the ascent set
+            client_losses = per_client_losses(model, params, batch,
+                                              num_clients, ctx,
+                                              microbatches=microbatches)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return params, opt_state, FLRoundMetrics(
+            loss=loss, client_losses=client_losses, grad_norm=gnorm)
+
+    return round_fn
+
+
+def add_awgn(grads, key, std: float):
+    """z ~ N(0, std²) elementwise on every leaf (eq. 10's receiver noise).
+
+    Leaves with a stacked leading (layer) axis generate noise one slice at a
+    time via lax.scan — full-leaf threefry would otherwise hold double-
+    buffered u32 bit tensors the size of the whole gradient (GiBs at 235B).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+
+    def noisy(g, k):
+        if g.ndim >= 2 and g.shape[0] > 4:
+            def body(i, gl):
+                z = jax.random.normal(jax.random.fold_in(k, i),
+                                      gl.shape, gl.dtype)
+                return i + 1, gl + std * z
+
+            _, out = jax.lax.scan(body, 0, g)
+            return out
+        return g + std * jax.random.normal(k, g.shape, g.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [noisy(g, k) for g, k in zip(leaves, keys)])
+
+
+def _per_example_nll(model, params, batch, ctx):
+    cfg = model.cfg
+    if cfg.family == "vlm":
+        logits = model.mod.forward(cfg, params, batch["tokens"], batch["images"], ctx)
+    elif cfg.family == "audio":
+        logits = model.mod.forward(cfg, params, batch["tokens"], batch["audio"], ctx)
+    elif cfg.family == "moe":
+        logits, _aux = model.mod.forward(cfg, params, batch["tokens"], ctx)
+    else:
+        logits = model.mod.forward(cfg, params, batch["tokens"], ctx)
+    from repro.models.dense import per_token_nll
+    return jnp.mean(per_token_nll(logits[:, :-1], batch["labels"][:, 1:]),
+                    axis=-1)                                          # [B]
+
+
+def per_client_losses(model, params, batch, num_clients: int, ctx=None,
+                      microbatches: int = 1):
+    """[N] mean loss per client: forward-only, per-example NLL, segment mean.
+
+    This is Alg. 1's ascent-side evaluation f_i(w̄^{t+1}; ξ̃) for all clients
+    at once (the server loop masks it down to the uniform ascent set U^(t)).
+    Microbatched with the same slicing as the descent pass so the fp32 logits
+    buffer stays 1/microbatches of the global batch.
+    """
+    cids = batch["client_ids"]
+    bsz = cids.shape[0]
+
+    if microbatches == 1:
+        per_ex = _per_example_nll(model, params, batch, ctx)
+        cid_flat = cids
+    else:
+        mb = {k: v.reshape((microbatches, bsz // microbatches) + v.shape[1:])
+              for k, v in batch.items()}
+
+        def probe(_, mslice):
+            return None, _per_example_nll(model, params, mslice, ctx)
+
+        _, per_mb = jax.lax.scan(probe, None, mb)
+        per_ex = per_mb.reshape(-1)
+        cid_flat = cids
+    ones = jnp.ones_like(per_ex)
+    sums = jnp.zeros((num_clients,), per_ex.dtype).at[cid_flat].add(per_ex)
+    cnts = jnp.zeros((num_clients,), per_ex.dtype).at[cid_flat].add(ones)
+    return sums / jnp.maximum(cnts, 1.0)

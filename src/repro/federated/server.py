@@ -1,0 +1,115 @@
+"""Host-side parameter server: selection, λ bookkeeping, energy ledger.
+
+The PS orchestrates the jit'd production round (``rounds.py``). Everything it
+handles is O(N) scalars per round — channel states, selection probabilities,
+λ, energy — the paper's dedicated control channel. The heavy lifting (local
+grads + over-the-air aggregation) happens inside the compiled round on the
+mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.channel import draw_channels, effective_channel
+from repro.core.dro import lambda_ascent
+from repro.core.energy import round_energy
+from repro.core.selection import gumbel_topk_mask, select_clients
+from repro.federated.rounds import make_fl_round
+from repro.utils.tree import tree_size
+
+
+@dataclass
+class ServerState:
+    params: object
+    opt_state: object
+    lam: jnp.ndarray
+    round: int = 0
+    energy_joules: float = 0.0
+    history: List[Dict] = field(default_factory=list)
+
+
+class ParameterServer:
+    """CA-AFL parameter server for the production tier."""
+
+    def __init__(self, model, optimizer, fl: FLConfig, *, ctx=None,
+                 jit_round: bool = True, seed: int = 0):
+        self.model = model
+        self.fl = fl
+        self.key = jax.random.PRNGKey(seed)
+        self.round_fn = make_fl_round(
+            model, optimizer, fl.num_clients, fl.clients_per_round,
+            noise_std=fl.noise_std, ctx=ctx)
+        if jit_round:
+            self.round_fn = jax.jit(self.round_fn)
+        self.optimizer = optimizer
+
+    def init_state(self, key) -> ServerState:
+        params = self.model.init(key)
+        self._model_size = tree_size(params)
+        return ServerState(
+            params=params,
+            opt_state=self.optimizer.init(params),
+            lam=jnp.full((self.fl.num_clients,), 1.0 / self.fl.num_clients),
+        )
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def step(self, state: ServerState, batch: Dict) -> ServerState:
+        """One CA-AFL round. batch carries tokens/labels/client_ids (+modal)."""
+        fl = self.fl
+        k_chan, k_sel, k_noise, k_asc = jax.random.split(self._next_key(), 4)
+
+        # --- physical layer + selection (host-side, control channel) -------
+        h = effective_channel(draw_channels(
+            k_chan, fl.num_clients, fl.num_subcarriers, fl.channel_floor,
+            flat=fl.flat_fading))
+        mask = select_clients(fl.method, k_sel, state.lam, h,
+                              fl.clients_per_round, C=fl.energy_C)
+
+        # --- compiled round on the mesh ------------------------------------
+        params, opt_state, metrics = self.round_fn(
+            state.params, state.opt_state, batch, mask, k_noise)
+
+        # --- energy ledger (eqs. 3-6; only the selected set transmits) -----
+        e_round = float(round_energy(h, mask, self._model_size, fl.psi, fl.tau))
+
+        # --- λ-ascent on a uniform K-subset (Alg. 1 lines 10-15) -----------
+        amask = gumbel_topk_mask(k_asc, jnp.zeros((fl.num_clients,)),
+                                 fl.clients_per_round)
+        lam = lambda_ascent(state.lam, metrics.client_losses, amask, fl.ascent_lr)
+
+        state.history.append({
+            "round": state.round,
+            "loss": float(metrics.loss),
+            "energy_j": e_round,
+            "num_scheduled": int(jnp.sum(mask)),
+            "worst_client_loss": float(jnp.max(metrics.client_losses)),
+            "grad_norm": float(metrics.grad_norm),
+        })
+        return ServerState(
+            params=params, opt_state=opt_state, lam=lam,
+            round=state.round + 1,
+            energy_joules=state.energy_joules + e_round,
+            history=state.history,
+        )
+
+    def run(self, state: ServerState, batches, rounds: int,
+            log_every: int = 10, log_fn: Optional[Callable] = print):
+        for t in range(rounds):
+            state = self.step(state, next(batches))
+            if log_fn and (t % log_every == 0 or t == rounds - 1):
+                h = state.history[-1]
+                log_fn(
+                    f"round {h['round']:4d} loss={h['loss']:.4f} "
+                    f"worst={h['worst_client_loss']:.4f} "
+                    f"E={state.energy_joules:.3e} J "
+                    f"sched={h['num_scheduled']}")
+        return state

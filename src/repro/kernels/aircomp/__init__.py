@@ -1,0 +1,1 @@
+from repro.kernels.aircomp.ops import aircomp_aggregate_flat

@@ -1,0 +1,29 @@
+"""Dispatching wrapper for the AirComp aggregation kernel.
+
+On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
+it runs in interpret mode for correctness work, falling back to the jnp
+oracle for speed when ``interpret=False`` is requested off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aircomp.kernel import aircomp_pallas
+from repro.kernels.aircomp.ref import aircomp_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def aircomp_aggregate_flat(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
+                           *, noise_std: float, k: float,
+                           use_pallas: bool = None) -> jnp.ndarray:
+    """Fused (sum_i w_i x_i + sigma z)/k over stacked flat updates [N, M]."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return aircomp_pallas(x, w, z, noise_std=noise_std, k=k,
+                              interpret=not on_tpu())
+    return aircomp_ref(x, w, z, noise_std, k)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the AirComp aggregation kernel (eq. 1 + 10).
+
+y[m] = ( sum_i w_i * x[i, m] + noise_std * z[m] ) / k
+
+w_i folds the selection mask and any per-client gain (perfect channel
+inversion => gain 1; imperfect-inversion ablations pass |h_i|/h_hat_i).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
+                noise_std: float, k: float) -> jnp.ndarray:
+    """x [N, M]; w [N]; z [M] -> [M] in fp32."""
+    acc = jnp.einsum("nm,n->m", x.astype(jnp.float32), w.astype(jnp.float32))
+    return (acc + noise_std * z.astype(jnp.float32)) / k

@@ -1,0 +1,43 @@
+"""Dispatching wrapper: flash attention over model-layout tensors.
+
+Accepts the model layout q [B, Sq, Hkv, G, d], k/v [B, T, Hkv, d] (the layout
+``repro.models.attention`` uses), flattens heads, pads sequence to tile
+multiples, and calls the Pallas kernel (compiled on TPU, interpret mode on
+CPU) or the jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    tq: int = 256, tk: int = 256,
+                    use_pallas: bool = None) -> jnp.ndarray:
+    """Model layout in/out: q [B, Sq, Hkv, G, d] -> [B, Sq, Hkv, G, d]."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    b, sq, hkv, g, d = q.shape
+    t = k.shape[1]
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(b * hkv * g, sq, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+    if use_pallas:
+        o = flash_attention_pallas(
+            qh, kh, vh, group=g, causal=causal, window=window,
+            tq=min(tq, sq), tk=min(tk, t),
+            interpret=jax.default_backend() != "tpu")
+    else:
+        o = attention_ref(
+            qh.reshape(b, hkv * g, sq, d),
+            kh.reshape(b, hkv, t, d),
+            vh.reshape(b, hkv, t, d),
+            causal=causal, window=window,
+        ).reshape(b * hkv * g, sq, d)
+    return o.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, windowed)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None):
+    """q [B, Hq, Sq, d]; k, v [B, Hkv, T, d]; Hq = G * Hkv.
+
+    Returns [B, Hq, Sq, d]. Full-materialization softmax in fp32.
+    """
+    b, hq, sq, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(t)[None, :]
+    allowed = jnp.ones((sq, t), bool)
+    if causal:
+        allowed &= kp <= qp
+    if window is not None:
+        allowed &= kp > qp - window
+    s = jnp.where(allowed, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Dispatching wrapper for the fused RMSNorm kernel (shape-polymorphic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5,
+            use_pallas: bool = None) -> jnp.ndarray:
+    """RMSNorm over the last dim for any leading shape."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_pallas:
+        out = rmsnorm_pallas(x2, scale, eps=eps,
+                             interpret=jax.default_backend() != "tpu")
+    else:
+        out = rmsnorm_ref(x2, scale, eps)
+    return out.reshape(*lead, x.shape[-1])

@@ -1,0 +1,1 @@
+from repro.kernels.slstm.ops import slstm_scan

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: sLSTM time scan with VMEM-resident recurrent weights.
+
+The sLSTM recurrence is a per-timestep matvec against R [H, d, 4, d]. At
+production batch sizes (B_local ~ 2-16) the XLA lowering re-reads R from HBM
+EVERY step — ~20 TB/device/step at xlstm-1.3b train_4k, the dominant roofline
+term (EXPERIMENTS.md §Perf). This kernel processes TIME_BLOCK steps per grid
+step with R (and the running state) pinned in VMEM scratch:
+
+    HBM traffic for R:  S reads  ->  S / TIME_BLOCK reads   (128x here)
+
+Grid is 1-D over time blocks (TPU grids run sequentially per core, so the
+state scratch carries across blocks). Per block: load gx [T, B, 4, H*d],
+fori_loop the recurrence in fp32, write hs [T, B, H*d].
+
+VMEM budget at xlstm-1.3b scale: R bf16 [4,512,4,512] = 8.4 MiB + states
+4 x B x 2048 x 4B ~ 0.5 MiB + gx/hs blocks ~ 4 MiB at T=64, B=2 — fits the
+~16 MiB VMEM of a v5e core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TIME_BLOCK = 64
+
+
+def _slstm_kernel(gx_ref, r_ref, b_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+                  hs_ref, hT_ref, cT_ref, nT_ref, mT_ref,
+                  h_scr, c_scr, n_scr, m_scr, *,
+                  tb: int, num_blocks: int, heads: int, dim: int):
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+        c_scr[...] = c0_ref[...].astype(jnp.float32)
+        n_scr[...] = n0_ref[...].astype(jnp.float32)
+        m_scr[...] = m0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)        # [H*d, 4*H*d] (kept in VMEM)
+    bias = b_ref[...].astype(jnp.float32)     # [1, 4*H*d]
+
+    def step(t, _):
+        h = h_scr[...]                         # [B, H*d] fp32
+        c = c_scr[...]
+        n = n_scr[...]
+        m = m_scr[...]
+        g = gx_ref[t].astype(jnp.float32)      # [B, 4*H*d]
+        rec = jax.lax.dot_general(h, r, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        pre = g + rec + bias                   # [B, 4*H*d]
+        b_sz = pre.shape[0]
+        pre = pre.reshape(b_sz, 4, heads * dim)
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        c_new = f * c + i * jnp.tanh(zt)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        h_scr[...] = h_new
+        c_scr[...] = c_new
+        n_scr[...] = n_new
+        m_scr[...] = m_new
+        hs_ref[t] = h_new.astype(hs_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, tb, step, ())
+
+    @pl.when(blk == num_blocks - 1)
+    def _final():
+        hT_ref[...] = h_scr[...]
+        cT_ref[...] = c_scr[...]
+        nT_ref[...] = n_scr[...]
+        mT_ref[...] = m_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def slstm_pallas(gx, r, b, h0, c0, n0, m0, *, tb: int = TIME_BLOCK,
+                 interpret: bool = False):
+    """gx [S, B, 4, H, d]; r [H, d, 4, d]; b [4, H, d]; states [B, H, d]."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    s, bsz, _, heads, dim = gx.shape
+    hd = heads * dim
+    tb = min(tb, s)
+    assert s % tb == 0, "pad sequence to TIME_BLOCK multiples"
+    num_blocks = s // tb
+    # layouts: gates flattened so the recurrence is one [B,Hd]x[Hd,4Hd] matmul
+    gx2 = gx.reshape(s, bsz, 4 * hd)
+    # r [H, d, 4, d] -> [H*d, 4*H*d] block-diagonal over heads
+    r_full = jnp.zeros((hd, 4, hd), r.dtype)
+    for h in range(heads):
+        r_full = r_full.at[h * dim:(h + 1) * dim, :,
+                           h * dim:(h + 1) * dim].set(r[h])  # [d, 4, d]
+    r2 = r_full.reshape(hd, 4 * hd)
+    b2 = b.reshape(1, 4 * hd)
+    st = lambda x: x.reshape(bsz, hd).astype(jnp.float32)
+
+    kernel = functools.partial(_slstm_kernel, tb=tb, num_blocks=num_blocks,
+                               heads=heads, dim=dim)
+    out_shapes = (
+        jax.ShapeDtypeStruct((s, bsz, hd), gx.dtype),
+        *(jax.ShapeDtypeStruct((bsz, hd), jnp.float32),) * 4,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((tb, bsz, 4 * hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((hd, 4 * hd), lambda i: (0, 0)),   # R: VMEM-resident
+            pl.BlockSpec((1, 4 * hd), lambda i: (0, 0)),
+            *(pl.BlockSpec((bsz, hd), lambda i: (0, 0)),) * 4,
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, bsz, hd), lambda i: (i, 0, 0)),
+            *(pl.BlockSpec((bsz, hd), lambda i: (0, 0)),) * 4,
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((bsz, hd), jnp.float32)] * 4,
+        interpret=interpret,
+    )(gx2, r2, b2, st(h0), st(c0), st(n0), st(m0))
+    hs, hT, cT, nT, mT = outs
+    unst = lambda x: x.reshape(bsz, heads, dim)
+    return (hs.reshape(s, bsz, heads, dim), (unst(hT), unst(cT), unst(nT),
+                                             unst(mT)))

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the sLSTM time-scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.slstm.kernel import slstm_pallas
+from repro.kernels.slstm.ref import slstm_ref
+
+
+def slstm_scan(gx, r, b, h0, c0, n0, m0, use_pallas: bool = None):
+    """gx [S, B, 4, H, d] -> (hs [S, B, H, d], final (h, c, n, m))."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return slstm_pallas(gx, r, b, h0, c0, n0, m0,
+                            interpret=jax.default_backend() != "tpu")
+    return slstm_ref(gx, r, b, h0, c0, n0, m0)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the sLSTM time-scan kernel (the xLSTM sLSTM cell)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_ref(gx, r, b, h0, c0, n0, m0):
+    """gx [S, B, 4, H, d]; r [H, d, 4, d]; b [4, H, d]; states [B, H, d].
+
+    Returns (hs [S, B, H, d], (h, c, n, m) final states). fp32 math with the
+    xLSTM m-stabilizer.
+    """
+
+    def cell(carry, g):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hdge->bghe", h, r)
+        pre = g + rec + b
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        c_new = f * c + i * jnp.tanh(zt)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(cell, (h0, c0, n0, m0), gx)
+    return hs, (h, c, n, m)

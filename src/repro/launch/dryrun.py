@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+For each pair this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs the step the shape's kind dictates —
+       train_*   -> the CA-AFL federated round (paper Alg. 1 on the mesh;
+                    ``--step plain`` lowers a bare LM step instead),
+       prefill_* -> chunked prefill,
+       decode_*  -> single-token serve step over the sharded KV/state cache,
+  3. ``jit(...).lower(**ShapeDtypeStructs).compile()`` — success proves the
+     sharding config is coherent; ``memory_analysis()`` proves it fits,
+  4. derives the three roofline terms from the compiled HLO text via
+     ``utils.hlo_cost.analyze_hlo`` — XLA's built-in ``cost_analysis()``
+     counts ``while`` bodies ONCE (verified empirically), so the analyzer
+     multiplies loop bodies by their parsed trip counts instead.
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPE_SKIPS, get_config, get_shape, INPUT_SHAPES
+from repro.configs.base import InputShape, ModelConfig
+from repro.federated.rounds import make_fl_round
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import Model, build_model, make_decode_step, make_prefill
+from repro.models.specs import ShardingCtx
+from repro.optim import sgd
+from repro.utils.hlo_cost import analyze_hlo
+from repro.utils.roofline import Roofline, model_flops
+from repro.utils.tree import tree_size
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+# per-arch gradient-accumulation defaults (activation memory / HBM fit)
+MICROBATCH_DEFAULT = {"qwen3-moe-235b-a22b": 8, "xlstm-1.3b": 8}
+
+
+# ---------------------------------------------------------------------------
+# Per-family scan-unit surgery (for the L=1/L=2 cost calibration)
+# ---------------------------------------------------------------------------
+
+
+def with_units(cfg: ModelConfig, n: int) -> ModelConfig:
+    if cfg.family in ("dense", "moe"):
+        return cfg.with_(num_layers=n)
+    if cfg.family == "ssm":
+        return cfg.with_(num_layers=n * cfg.slstm_group)
+    if cfg.family == "hybrid":
+        return cfg.with_(num_layers=n * cfg.shared_attn_every)
+    if cfg.family == "vlm":
+        return cfg.with_(num_layers=n * cfg.cross_attn_every)
+    if cfg.family == "audio":
+        return cfg.with_(num_layers=n, encoder_layers=n, decoder_layers=n)
+    raise ValueError(cfg.family)
+
+
+def num_units(cfg: ModelConfig) -> float:
+    if cfg.family in ("dense", "moe"):
+        return cfg.num_layers
+    if cfg.family == "ssm":
+        return cfg.num_layers / cfg.slstm_group
+    if cfg.family == "hybrid":
+        return cfg.num_layers / cfg.shared_attn_every  # fractional tail ok
+    if cfg.family == "vlm":
+        return cfg.num_layers / cfg.cross_attn_every
+    if cfg.family == "audio":
+        return cfg.encoder_layers
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(opt_state_abs, param_specs):
+    """Spec tree for optimizer state: param-shaped subtrees reuse param
+    specs; scalars replicate."""
+    def one(sub):
+        # sub is either a scalar leaf, None, or a params-shaped pytree
+        if sub is None:
+            return None
+        if hasattr(sub, "ndim") and sub.ndim == 0:
+            return P()
+        return param_specs
+
+    if hasattr(opt_state_abs, "_fields"):  # NamedTuple state
+        return type(opt_state_abs)(*(one(getattr(opt_state_abs, f))
+                                     for f in opt_state_abs._fields))
+    if isinstance(opt_state_abs, tuple):
+        return tuple(opt_state_specs(s, param_specs) for s in opt_state_abs)
+    return one(opt_state_abs)
+
+
+# ---------------------------------------------------------------------------
+# Step construction + lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, step_kind: str = "fl",
+               cfg_override: ModelConfig = None, chunk: int = 2048,
+               microbatches: int = 4, fsdp: bool = True,
+               fused_probe: bool = False):
+    """Lower + compile one (arch, shape) on ``mesh``. Returns (compiled,
+    lowered, model, meta dict)."""
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_name)
+    ctx = ShardingCtx(mesh, fsdp=fsdp)
+    model = build_model(cfg)
+    pspecs = model.param_specs(ctx)
+    params_abs = model.abstract_params()
+    n_params = tree_size(params_abs)
+
+    if shape.kind == "train":
+        num_clients = ctx.data_size
+        opt = sgd(0.1)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = opt_state_specs(opt_abs, pspecs)
+        batch_abs, bspecs = model.train_batch_specs(shape, ctx)
+        batch_abs["client_ids"] = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32)
+        bspecs["client_ids"] = P(bspecs["tokens"][0])
+        mask_abs = jax.ShapeDtypeStruct((num_clients,), jnp.float32)
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        if step_kind == "fl":
+            step = make_fl_round(model, opt, num_clients,
+                                 max(num_clients // 2, 1),
+                                 noise_std=1e-3, ctx=ctx,
+                                 microbatches=microbatches,
+                                 fused_probe=fused_probe)
+            args = (params_abs, opt_abs, batch_abs, mask_abs, key_abs)
+            in_sh = (named(mesh, pspecs), named(mesh, ospecs),
+                     named(mesh, bspecs), named(mesh, P()), named(mesh, P()))
+        else:  # plain LM step
+            from repro.models.api import make_train_step
+            step = make_train_step(model, opt, ctx)
+            batch_abs.pop("client_ids")
+            bspecs.pop("client_ids")
+            args = (params_abs, opt_abs, batch_abs)
+            in_sh = (named(mesh, pspecs), named(mesh, ospecs),
+                     named(mesh, bspecs))
+        with mesh:
+            # donate params+opt_state: the update aliases their buffers
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(0, 1)).lower(*args)
+
+    elif shape.kind == "prefill":
+        batch_abs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        b_ax = ctx.data_if(shape.global_batch) if shape.global_batch > 1 else None
+        bspecs = {"tokens": P(b_ax, None)}
+        batch_abs.update(model.extra_inputs(shape.global_batch))
+        bspecs.update(model.extra_input_specs(ctx, shape.global_batch))
+        step = make_prefill(model, ctx, chunk=chunk)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+            ).lower(params_abs, batch_abs)
+
+    else:  # decode
+        (cache_abs, token_abs, pos_abs), (cspecs, tspec, pspec) = \
+            model.decode_input_specs(shape, ctx)
+        step = make_decode_step(model, ctx)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                              named(mesh, tspec), named(mesh, pspec)),
+            ).lower(params_abs, cache_abs, token_abs, pos_abs)
+
+    compiled = lowered.compile()
+    return compiled, lowered, model, {"n_params": n_params, "shape": shape}
+
+
+def analyze(compiled, chips: int):
+    """Per-device cost from the compiled HLO text (while-trip-aware; see
+    utils/hlo_cost.py) + XLA's own [loop-body-once] numbers as cross-check."""
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    hc = analyze_hlo(text)
+    return {
+        "flops": hc.flops,
+        "bytes": hc.bytes,
+        "collectives": {**hc.wire_by_kind, "total": hc.wire},
+        "xla_cost_analysis": {  # NOT trip-count aware — reference only
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    }
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             step_kind: str = "fl", microbatches: int = 4,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    t0 = time.time()
+
+    compiled, lowered, model, meta = lower_pair(
+        arch, shape_name, mesh, step_kind=step_kind, microbatches=microbatches)
+    full = analyze(compiled, chips)
+    t_full = time.time() - t0
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "step": step_kind, "microbatches": microbatches,
+        "n_params": meta["n_params"],
+        "compile_s": round(t_full, 1),
+        "raw": full,
+        "fits_hbm": full["memory"]["peak_bytes"] < HBM_PER_CHIP,
+    }
+
+    flops, bytes_ = full["flops"], full["bytes"]
+    wire = full["collectives"].get("total", 0.0)
+
+    mf = model_flops(cfg, shape, meta["n_params"])
+    roof = Roofline(flops=flops, bytes_hbm=bytes_, bytes_wire=wire,
+                    chips=chips, model_flops=mf,
+                    collectives=full["collectives"])
+    result["roofline"] = {
+        "flops_per_dev": flops, "bytes_per_dev": bytes_,
+        "wire_per_dev": wire, "model_flops_global": mf,
+        **roof.row(),
+    }
+
+    if verbose:
+        mem = full["memory"]
+        print(f"[{arch} x {shape_name} x {mesh_name} x {step_kind}] "
+              f"compile={t_full:.0f}s peak={mem['peak_bytes']/2**30:.2f}GiB "
+              f"fit={result['fits_hbm']} "
+              f"t_c={roof.t_compute*1e3:.1f}ms t_m={roof.t_memory*1e3:.1f}ms "
+              f"t_w={roof.t_collective*1e3:.1f}ms "
+              f"bound={roof.bottleneck} useful={roof.useful_ratio:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--step", default="fl", choices=["fl", "plain"])
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="grad-accumulation slices (default: per-arch)")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        pairs = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES
+                 if (a, s) not in SHAPE_SKIPS]
+    else:
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in pairs:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        fn = outdir / f"{arch}__{shape}__{mesh_tag}__{args.step}.json"
+        try:
+            mb = args.microbatches or MICROBATCH_DEFAULT.get(arch, 4)
+            res = run_pair(arch, shape, multi_pod=args.multi_pod,
+                           step_kind=args.step, microbatches=mb)
+            fn.write_text(json.dumps(res, indent=2, default=str))
+        except Exception as e:  # noqa: BLE001 — record and continue the matrix
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(pairs)} pairs lowered+compiled OK on "
+          f"{'2x16x16' if args.multi_pod else '16x16'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Batched serving launcher: prefill + greedy decode of the global model.
+
+Serves the model CA-AFL trained (or a fresh init) with a simple static-batch
+scheduler: requests are padded to a common prompt length, prefilled once, and
+decoded step-by-step with one compiled serve_step. This is the code path the
+decode_* dry-run shapes lower at production scale.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen2-0.5b --reduced --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.models.api import build_model, make_decode_step, make_prefill
+
+
+def pad_cache_for_decode(model, cache, prompt_len: int, total_len: int):
+    """Grow attention caches from prefill length to serving length."""
+    return model.grow_cache(cache, prompt_len, total_len)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    cfg = cfg.with_(dtype="float32", remat=False)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    total = args.prompt_len + args.gen
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["audio"] = jax.random.normal(
+            key, (args.batch, cfg.num_audio_frames, cfg.d_model))
+
+    prefill = jax.jit(make_prefill(model, chunk=max(args.prompt_len, 16)))
+    serve_step = jax.jit(make_decode_step(model))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    cache = pad_cache_for_decode(model, cache, args.prompt_len, total)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(args.gen - 1):
+        tok, logits, cache = serve_step(
+            params, cache, tok, jnp.asarray(args.prompt_len + i, jnp.int32))
+        out.append(tok)
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"generated ids[0]: {gen[0][:16]} ...")
+    print(f"{args.batch * args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Unified model API: one facade over the six architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods have uniform
+signatures across dense / moe / ssm(xlstm) / hybrid(zamba2) / vlm / audio:
+
+    init(key) -> params
+    param_specs(ctx) -> PartitionSpec pytree (matches params)
+    loss_fn(params, batch, ctx) -> scalar          batch: tokens/labels[/images
+                                                   /audio][/weights]
+    prefill(params, batch, ctx) -> (logits, cache)
+    decode_step(params, cache, token, pos, ctx) -> (logits, cache)
+    init_cache(batch, seq_len) / cache_specs(ctx, batch, seq_len)
+    input_specs(shape, ctx) -> (kwargs of ShapeDtypeStruct, shardings) for the
+                               step function that `shape.kind` exercises.
+
+``input_specs`` is the dry-run entry point: weak-type-correct stand-ins, no
+allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import dense, encdec, hybrid, moe, vlm, xlstm
+from repro.models.specs import ShardingCtx
+
+_FAMILY = {
+    "dense": dense,
+    "moe": moe,
+    "ssm": xlstm,
+    "hybrid": hybrid,
+    "vlm": vlm,
+    "audio": encdec,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    mod: Any
+
+    # --- params ------------------------------------------------------------
+
+    def init(self, key):
+        return self.mod.init(self.cfg, key)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: self.mod.init(self.cfg, k),
+                              jax.random.PRNGKey(0))
+
+    def param_specs(self, ctx: ShardingCtx):
+        return self.mod.param_specs(self.cfg, ctx)
+
+    # --- train -------------------------------------------------------------
+
+    def loss_fn(self, params, batch, ctx=None):
+        return self.mod.loss_fn(self.cfg, params, batch, ctx)
+
+    # --- serve -------------------------------------------------------------
+
+    def prefill(self, params, batch, ctx=None, chunk: int = 2048):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return vlm.prefill(cfg, params, batch["tokens"], batch["images"],
+                               ctx, chunk=chunk)
+        if cfg.family == "audio":
+            return encdec.prefill(cfg, params, batch["tokens"], batch["audio"],
+                                  ctx, chunk=chunk)
+        if cfg.family == "ssm":
+            return xlstm.prefill(cfg, params, batch["tokens"], ctx)
+        return self.mod.prefill(cfg, params, batch["tokens"], ctx, chunk=chunk)
+
+    def decode_step(self, params, cache, token, pos, ctx=None):
+        return self.mod.decode_step(self.cfg, params, cache, token, pos, ctx)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return self.mod.init_cache(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    def cache_specs(self, ctx: ShardingCtx, batch: int, seq_len: int):
+        return self.mod.cache_specs(self.cfg, ctx, batch, seq_len)
+
+    def grow_cache(self, cache, cur_len: int, new_len: int):
+        """Extend the KV sequence axis from cur_len to new_len (serving:
+        prefill cache -> decode cache). State caches (SSM/xLSTM) pass
+        through unchanged."""
+        extra = new_len - cur_len
+        if extra <= 0 or self.cfg.family == "ssm":
+            return cache
+        fam = self.cfg.family
+
+        def pad_axis(x, axis):
+            pad = [(0, 0)] * x.ndim
+            pad[axis] = (0, extra)
+            return jnp.pad(x, pad)
+
+        if fam in ("dense", "moe"):
+            return {"k": pad_axis(cache["k"], 2), "v": pad_axis(cache["v"], 2)}
+        if fam == "hybrid":
+            return cache._replace(k=pad_axis(cache.k, 2),
+                                  v=pad_axis(cache.v, 2))
+        if fam == "vlm":
+            return cache._replace(k=pad_axis(cache.k, 3),
+                                  v=pad_axis(cache.v, 3))
+        if fam == "audio":
+            return cache._replace(k=pad_axis(cache.k, 2),
+                                  v=pad_axis(cache.v, 2))
+        return cache
+
+    # --- dry-run input specs ------------------------------------------------
+
+    def extra_inputs(self, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Stubbed modality-frontend embeddings (the assignment carve-out)."""
+        cfg = self.cfg
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "vlm":
+            out["images"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            out["audio"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+        return out
+
+    def extra_input_specs(self, ctx: ShardingCtx, batch: int) -> Dict[str, P]:
+        b_ax = ctx.data_if(batch) if batch > 1 else None
+        return {k: P(b_ax, None, None) for k in self.extra_inputs(batch)}
+
+    def train_batch_specs(self, shape: InputShape, ctx: ShardingCtx):
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "weights": jax.ShapeDtypeStruct((b,), jnp.float32),
+            **self.extra_inputs(b),
+        }
+        b_ax = ctx.data_if(b) if b > 1 else None
+        specs = {
+            "tokens": P(b_ax, None),
+            "labels": P(b_ax, None),
+            "weights": P(b_ax),
+            **self.extra_input_specs(ctx, b),
+        }
+        return batch, specs
+
+    def decode_input_specs(self, shape: InputShape, ctx: ShardingCtx):
+        """(cache, token, pos) ShapeDtypeStructs + matching specs."""
+        b, s = shape.global_batch, shape.seq_len
+        cache = self.abstract_cache(b, s)
+        cspecs = self.cache_specs(ctx, b, s)
+        b_ax = ctx.data_if(b) if b > 1 else None
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return (cache, token, pos), (cspecs, P(b_ax), P())
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY:
+        raise ValueError(f"no production model for family {cfg.family!r}")
+    return Model(cfg=cfg, mod=_FAMILY[cfg.family])
+
+
+# ---------------------------------------------------------------------------
+# Step factories (shared by the launcher, dry-run and smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, optimizer, ctx: Optional[ShardingCtx] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, ctx))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from repro.optim import apply_updates
+        params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_decode_step(model: Model, ctx: Optional[ShardingCtx] = None):
+    """(params, cache, token, pos) -> (next_token, logits, cache) — greedy."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos, ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill(model: Model, ctx: Optional[ShardingCtx] = None,
+                 chunk: int = 2048):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx, chunk=chunk)
+
+    return prefill_step

@@ -1,0 +1,149 @@
+"""GQA attention: full, causal, sliding-window, chunked (online-softmax), and
+KV-cache decode.
+
+The chunked path scans over KV blocks with a running (max, denom, acc) online
+softmax — the pure-JAX twin of the Pallas flash-attention kernel in
+``repro.kernels.flash_attention`` (which is the TPU-target implementation of
+the same math). Chunking bounds the materialized score block to
+[B, Hkv, G, Sq, chunk] which is what makes `prefill_32k` fit.
+
+Layouts: q [B, Sq, Hkv, G, hd]; k, v [B, T, Hkv, hd]. GQA never materializes
+repeated KV heads — the group axis G lives on Q only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def split_heads(x: jnp.ndarray, num_kv: int, group: int, head_dim: int) -> jnp.ndarray:
+    """[B, S, H*hd] -> [B, S, Hkv, G, hd]."""
+    b, s, _ = x.shape
+    return x.reshape(b, s, num_kv, group, head_dim)
+
+
+def merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[B, S, Hkv, G, hd] -> [B, S, H*hd]."""
+    b, s, k, g, d = x.shape
+    return x.reshape(b, s, k * g * d)
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """[Sq, T] boolean mask of *allowed* positions."""
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_pos: Optional[jnp.ndarray] = None,
+    kv_pos: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    kv_len: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> jnp.ndarray:
+    """Grouped-query attention with optional KV chunking.
+
+    q: [B, Sq, Hkv, G, hd]; k, v: [B, T, Hkv, hd]. Returns [B, Sq, Hkv, G, hd].
+    kv_len: optional dynamic valid-length (decode: positions >= kv_len masked).
+    """
+    b, sq, hkv, g, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if kv_pos is None:
+        kv_pos = jnp.arange(t)
+
+    if chunk is None or chunk >= t:
+        s = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32)
+        s *= scale
+        allowed = _mask(q_pos, kv_pos, causal, window)
+        if kv_len is not None:
+            allowed &= kv_pos[None, :] < kv_len
+        s = jnp.where(allowed, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+        return out
+
+    # --- chunked online-softmax over KV blocks -----------------------------
+    num_chunks = -(-t // chunk)
+    pad = num_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)  # masked out
+
+    def body(carry, idx):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=1)
+        pc = jax.lax.dynamic_slice_in_dim(kv_pos, idx * chunk, chunk, axis=0)
+        s = jnp.einsum("bskgd,btkd->bkgst", q, kc, preferred_element_type=jnp.float32)
+        s *= scale
+        allowed = _mask(q_pos, pc, causal, window)
+        if kv_len is not None:
+            allowed &= pc[None, :] < kv_len
+        s = jnp.where(allowed, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), vc).astype(jnp.float32)
+        # acc is [B, Sq, Hkv, G, hd]; corr is [B, Hkv, G, Sq]
+        corr_b = jnp.moveaxis(corr, -1, 1)[..., None]  # [B, Sq, Hkv, G, 1]
+        acc_new = acc * corr_b + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, g, hd), jnp.float32)
+    if remat:
+        # rematerialize the [.., Sq, chunk] score block in backward: the scan
+        # then saves only the (m, l, acc) carry per chunk, not the scores —
+        # the flash-attention backward policy, expressed in pure JAX.
+        body = jax.checkpoint(body)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(num_chunks))
+    denom = jnp.moveaxis(l, -1, 1)[..., None]  # [B, Sq, Hkv, G, 1]
+    out = jnp.where(denom > 0, acc / jnp.maximum(denom, 1e-30), 0.0)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode: q [B, 1, Hkv, G, hd] over cache [B, T, Hkv, hd].
+
+    Positions > pos are masked (cache beyond the write point); the T
+    contraction is left unchunked so GSPMD can shard it over the `model`
+    axis (flash-decoding split-K — the partial-softmax combine is inserted
+    by SPMD partitioning of the reduction).
+    """
+    t = cache_k.shape[1]
+    return attention(
+        q, cache_k, cache_v,
+        q_pos=pos[None] if pos.ndim == 0 else pos,
+        kv_pos=jnp.arange(t),
+        causal=True,
+        window=window,
+        chunk=None,
+    )

@@ -1,0 +1,378 @@
+"""Llama-style dense decoder (granite-34b, qwen2-0.5b/1.5b/7b).
+
+Pure functional: params are a pytree with every per-layer leaf stacked on a
+leading [L] axis and the layer loop a ``lax.scan`` (keeps the HLO one-layer
+sized for the 512-device dry-run). Supports:
+
+  - train forward + next-token loss (per-example weights for FL rounds)
+  - prefill (chunked online-softmax attention)
+  - single-token decode over a KV cache, full or rolling (sliding-window)
+    — the rolling cache is what makes ``long_500k`` sub-quadratic & O(window).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import apply_rope, dense_init, embed_init, rms_norm, swiglu
+from repro.models.specs import ShardingCtx, pad_vocab
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def cst(x, spec: P, ctx: Optional[ShardingCtx]):
+    """Sharding constraint that no-ops without a mesh (smoke tests)."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec)
+    )
+
+
+def _seq_spec(ctx: Optional[ShardingCtx], seq: int) -> P:
+    """Residual-stream spec: batch over data, seq over model when divisible."""
+    if ctx is None:
+        return P()
+    m = ctx.axes.model if seq % max(ctx.model_size, 1) == 0 and seq > 1 else None
+    return P(ctx.axes.data, m, None)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dt = _dt(cfg)
+    L, D, F = cfg.num_layers, cfg.d_model, cfg.d_ff
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    vp = pad_vocab(cfg.vocab_size)
+    ks = jax.random.split(key, 12)
+
+    def stacked(k, shape, scale=None):
+        return dense_init(k, (L,) + shape, dt, scale)
+
+    params = {
+        "embed": embed_init(ks[0], (vp, D), dt),
+        "layers": {
+            "attn_norm": jnp.ones((L, D), dt),
+            "wq": stacked(ks[1], (D, hkv, g, hd)),
+            "wk": stacked(ks[2], (D, hkv, hd)),
+            "wv": stacked(ks[3], (D, hkv, hd)),
+            "wo": stacked(ks[4], (hkv, g, hd, D), scale=1.0 / jnp.sqrt(D)),
+            "mlp_norm": jnp.ones((L, D), dt),
+            "w_gate": stacked(ks[5], (D, F)),
+            "w_up": stacked(ks[6], (D, F)),
+            "w_down": stacked(ks[7], (F, D)),
+        },
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": dense_init(ks[8], (D, vp), dt),
+    }
+    if cfg.qkv_bias:
+        params["layers"]["bq"] = jnp.zeros((L, hkv, g, hd), dt)
+        params["layers"]["bk"] = jnp.zeros((L, hkv, hd), dt)
+        params["layers"]["bv"] = jnp.zeros((L, hkv, hd), dt)
+    return params
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    a = ctx.axes
+    vp = pad_vocab(cfg.vocab_size)
+
+    def st(spec: P) -> P:  # prepend unsharded layer axis
+        return P(None, *spec)
+
+    specs = {
+        "embed": P(ctx.model_if(vp), ctx.pdata_if(cfg.d_model)),
+        "layers": {
+            "attn_norm": st(P(None)),
+            "wq": st(ctx.attn_q_spec(hkv, g, hd)),
+            "wk": st(ctx.attn_kv_spec(hkv, hd)),
+            "wv": st(ctx.attn_kv_spec(hkv, hd)),
+            "wo": st(ctx.attn_o_spec(hkv, g, hd)),
+            "mlp_norm": st(P(None)),
+            "w_gate": st(P(ctx.pdata, a.model)),
+            "w_up": st(P(ctx.pdata, a.model)),
+            "w_down": st(P(a.model, ctx.pdata)),
+        },
+        "final_norm": P(None),
+        "lm_head": P(ctx.pdata_if(cfg.d_model), ctx.model_if(vp)),
+    }
+    if cfg.qkv_bias:
+        q = ctx.attn_q_spec(hkv, g, hd)
+        k = ctx.attn_kv_spec(hkv, hd)
+        specs["layers"]["bq"] = st(P(q[1], q[2], q[3]))
+        specs["layers"]["bk"] = st(P(k[1], k[2]))
+        specs["layers"]["bv"] = st(P(k[1], k[2]))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer
+# ---------------------------------------------------------------------------
+
+
+def _attention_remat(cfg, q, k, v, *, window=None, chunk=None, causal=True):
+    """Attention with its chunk-scan intermediates rematerialized.
+
+    Differentiating the chunked online-softmax scan would otherwise SAVE the
+    per-chunk [B, H, G, Sq, chunk] score blocks for backward (~10 GiB/device
+    at granite train_4k scale). Recomputing them is what the flash-attention
+    backward does on real hardware; jax.checkpoint expresses the same policy
+    here (composes with the outer per-layer remat)."""
+
+    return attn_lib.attention(q, k, v, causal=causal, window=window,
+                               chunk=chunk, remat=cfg.remat)
+
+
+def _qkv(cfg, lp, x, positions, ctx=None):
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    q = jnp.einsum("bsd,dkgh->bskgh", x, lp["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, lp["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, lp["wv"])
+    if ctx is not None and ctx.mesh is not None and x.shape[1] > 1:
+        # Megatron TP: head-shard the projection OUTPUTS. Without this GSPMD
+        # partitions the einsum batch-wise and all-gathers the FULL (fp32-
+        # upcast) weights per layer per microbatch — measured 2.7 TB/device
+        # at granite train_4k (EXPERIMENTS.md §Perf granite iteration 1).
+        # ONLY when a true head axis (Hkv or G) is the sharded dim: pinning
+        # the head_dim axis instead forces a psum inside every attention
+        # (measured 25x wire regression on qwen3-moe — §Perf, refuted).
+        qs = ctx.attn_q_spec(hkv, g, hd)
+        ks = ctx.attn_kv_spec(hkv, hd)
+        if qs[3] is None:  # heads sharded, not head_dim
+            q = cst(q, P(ctx.axes.data, None, qs[1], qs[2], None), ctx)
+        if ks[1] is not None:  # kv heads sharded
+            k = cst(k, P(ctx.axes.data, None, ks[1], None), ctx)
+            v = cst(v, P(ctx.axes.data, None, ks[1], None), ctx)
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    b, s = x.shape[:2]
+    q = apply_rope(q.reshape(b, s, hkv * g, hd), positions, cfg.rope_theta)
+    q = q.reshape(b, s, hkv, g, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp_tp(cfg, lp, h, ctx):
+    """SwiGLU with Megatron-sharded hidden activations (see _qkv note)."""
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, lp["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", h, lp["w_up"])
+    if ctx is not None and ctx.mesh is not None and h.shape[1] > 1:
+        spec = P(ctx.axes.data, None, ctx.model_if(g.shape[-1]))
+        g = cst(g, spec, ctx)
+        u = cst(u, spec, ctx)
+    return jnp.einsum("bsf,fd->bsd", g * u, lp["w_down"])
+
+
+def _attn_out(lp, o):
+    return jnp.einsum("bskgh,kghd->bsd", o, lp["wo"])
+
+
+def decoder_layer(
+    cfg: ModelConfig,
+    lp: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    ctx: Optional[ShardingCtx],
+    *,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+):
+    """One pre-norm GQA + SwiGLU block (train / prefill path)."""
+    seq = x.shape[1]
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, h, positions, ctx)
+    o = _attention_remat(cfg, q, k, v, window=window, chunk=chunk)
+    x = x + _attn_out(lp, o)
+    x = cst(x, _seq_spec(ctx, seq), ctx)
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + _mlp_tp(cfg, lp, h, ctx)
+    return cst(x, _seq_spec(ctx, seq), ctx)
+
+
+# ---------------------------------------------------------------------------
+# Train forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens, ctx):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+    return cst(x, _seq_spec(ctx, tokens.shape[1]), ctx)
+
+
+def _logits(cfg, params, x, ctx):
+    """[B, S, D] -> fp32 logits with padded-vocab mask; vocab model-sharded."""
+    vp = pad_vocab(cfg.vocab_size)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    if ctx is not None and ctx.mesh is not None:
+        logits = cst(logits, P(ctx.axes.data, None, ctx.model_if(vp)), ctx)
+    if vp != cfg.vocab_size:
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=None, window=None):
+    """Teacher-forced forward: tokens [B, S] -> logits [B, S, Vp]."""
+    s = tokens.shape[1]
+    if chunk is None and s > 2048:
+        chunk = 2048  # bound the attention score block (remat-safe)
+    positions = jnp.arange(s)
+    x = _embed(cfg, params, tokens, ctx)
+
+    def body(xc, lp):
+        return decoder_layer(cfg, lp, xc, positions, ctx, chunk=chunk, window=window), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x, ctx)
+
+
+def per_token_nll(logits, labels):
+    """-log p(label) per token WITHOUT a gather on the (vocab-sharded)
+    logits: a gather along a sharded axis makes GSPMD all-gather the full
+    [B, S, V] fp32 logits (~13 GiB/device at granite scale). The
+    iota-compare + masked-sum form partitions cleanly."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    vp = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+              == labels[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return lse - label_logit
+
+
+def token_xent(logits, labels, weights=None):
+    """Mean next-token cross-entropy; weights: optional per-example [B]."""
+    per_ex = jnp.mean(per_token_nll(logits, labels), axis=-1)  # [B]
+    if weights is not None:
+        return jnp.mean(per_ex * weights)
+    return jnp.mean(per_ex)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, *, chunk=None):
+    logits = forward(cfg, params, batch["tokens"], ctx, chunk=chunk)
+    return token_xent(logits[:, :-1], batch["labels"][:, 1:], batch.get("weights"))
+
+
+# ---------------------------------------------------------------------------
+# KV cache: prefill + decode (full or rolling)
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Rolling (sliding-window) cache for long contexts, full cache otherwise.
+
+    The rolling variant engages only beyond ``long_context_threshold`` so
+    that decode_32k serves exact full attention while long_500k runs
+    sub-quadratic O(window) (DESIGN.md §Shape skips)."""
+    if (cfg.window is not None and seq_len > cfg.window
+            and seq_len >= cfg.long_context_threshold):
+        return cfg.window
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    t = cache_len(cfg, seq_len)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, t, hkv, hd)
+    return {"k": jnp.zeros(shape, _dt(cfg)), "v": jnp.zeros(shape, _dt(cfg))}
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int, seq_len: int) -> dict:
+    """KV-seq over model (flash-decoding split-K); batch over data if divisible."""
+    t = cache_len(cfg, seq_len)
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    t_ax = ctx.model_if(t)
+    spec = P(None, b_ax, t_ax, None, None)
+    return {"k": spec, "v": spec}
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=2048):
+    """tokens [B, S] -> (last-token logits [B, Vp], cache)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _embed(cfg, params, tokens, ctx)
+    window = cfg.window if (cfg.window and s > cfg.window) else None
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, h, positions, ctx)
+        o = attn_lib.attention(q, k, v, causal=True, window=window, chunk=chunk)
+        xc = xc + _attn_out(lp, o)
+        xc = cst(xc, _seq_spec(ctx, s), ctx)
+        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + _mlp_tp(cfg, lp, h, ctx)
+        return cst(xc, _seq_spec(ctx, s), ctx), (k, v)
+
+    x, (ck, cv) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x, ctx)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def _rolling_kv_pos(pos: jnp.ndarray, t: int) -> jnp.ndarray:
+    """Absolute positions held by each rolling-cache slot at write-time `pos`."""
+    slots = jnp.arange(t)
+    slot = pos % t
+    return pos - ((slot - slots) % t)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
+    """One decode step. token [B] int32, pos scalar int32 (uniform batch).
+
+    Returns (logits [B, Vp], updated cache). The cache is rolling iff it was
+    allocated shorter than the position range (sliding-window serving).
+    """
+    b = token.shape[0]
+    t = cache["k"].shape[2]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(_dt(cfg))
+    x = x.reshape(b, 1, -1)
+    positions = pos[None] if pos.ndim == 0 else pos
+    rolling = cfg.window is not None and t == cfg.window
+    slot = (pos % t) if rolling else pos
+    if rolling:
+        kv_pos = _rolling_kv_pos(pos, t)
+        # unwritten slots (pos < window) carry negative positions: mask them
+        # by pushing beyond the causal horizon.
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)
+    else:
+        kv_pos = jnp.arange(t)
+
+    def body(xc, scanned):
+        lp, ck, cv = scanned
+        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        o = attn_lib.attention(
+            q, ck, cv,
+            q_pos=positions, kv_pos=kv_pos, causal=True,
+            window=cfg.window if rolling else None,
+            kv_len=None if rolling else pos + 1,
+        )
+        xc = xc + _attn_out(lp, o)
+        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return xc, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x, ctx)[:, 0]
+    return logits, {"k": ck, "v": cv}

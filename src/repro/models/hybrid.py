@@ -1,0 +1,309 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block
+[arXiv:2411.15242].
+
+``num_layers`` Mamba2 blocks; after every ``shared_attn_every``-th block the
+*same* attention+MLP block (single parameter set, Zamba's signature trick) is
+applied — each application site keeps its own KV cache. Layer loop = scan over
+groups of (every Mamba blocks + shared attn); trailing Mamba layers (38 % 6 = 2)
+run as a second scan.
+
+long_500k: the Mamba backbone is O(1)-state; the shared attention block runs a
+rolling sliding-window cache (cfg.window), keeping the whole model
+sub-quadratic at 524k positions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import dense, ssm
+from repro.models.dense import cst, _seq_spec, token_xent
+from repro.models.layers import dense_init, embed_init, rms_norm, swiglu
+from repro.models.specs import ShardingCtx, pad_vocab
+
+
+def _struct(cfg: ModelConfig):
+    g = cfg.num_layers // cfg.shared_attn_every
+    tail = cfg.num_layers - g * cfg.shared_attn_every
+    return g, cfg.shared_attn_every, tail  # (groups, per, tail)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    ks = jax.random.split(key, 8)
+    return {
+        "attn_norm": jnp.ones((D,), dt),
+        "wq": dense_init(ks[0], (D, hkv, g, hd), dt),
+        "wk": dense_init(ks[1], (D, hkv, hd), dt),
+        "wv": dense_init(ks[2], (D, hkv, hd), dt),
+        "wo": dense_init(ks[3], (hkv, g, hd, D), dt, scale=1.0 / jnp.sqrt(D)),
+        "mlp_norm": jnp.ones((D,), dt),
+        "w_gate": dense_init(ks[4], (D, F), dt),
+        "w_up": dense_init(ks[5], (D, F), dt),
+        "w_down": dense_init(ks[6], (F, D), dt, scale=1.0 / jnp.sqrt(D)),
+    }
+
+
+def _attn_block_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    a = ctx.axes
+    return {
+        "attn_norm": P(None),
+        "wq": ctx.attn_q_spec(hkv, g, hd),
+        "wk": ctx.attn_kv_spec(hkv, hd),
+        "wv": ctx.attn_kv_spec(hkv, hd),
+        "wo": ctx.attn_o_spec(hkv, g, hd),
+        "mlp_norm": P(None),
+        "w_gate": P(ctx.pdata, a.model),
+        "w_up": P(ctx.pdata, a.model),
+        "w_down": P(a.model, ctx.pdata),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    vp = pad_vocab(cfg.vocab_size)
+    L = cfg.num_layers
+    ks = jax.random.split(key, 5)
+    mamba = jax.vmap(lambda k: ssm.block_init(cfg, k))(jax.random.split(ks[1], L))
+    return {
+        "embed": embed_init(ks[0], (vp, cfg.d_model), dt),
+        "mamba": mamba,                                   # [L, ...]
+        "shared_attn": _attn_block_init(cfg, ks[2]),      # single param set
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[3], (cfg.d_model, vp), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    vp = pad_vocab(cfg.vocab_size)
+    bs = ssm.block_specs(cfg, ctx)
+    return {
+        "embed": P(ctx.model_if(vp), ctx.pdata_if(cfg.d_model)),
+        "mamba": jax.tree.map(lambda s: P(None, *s), bs,
+                              is_leaf=lambda x: isinstance(x, P)),
+        "shared_attn": _attn_block_specs(cfg, ctx),
+        "final_norm": P(None),
+        "lm_head": P(ctx.pdata_if(cfg.d_model), ctx.model_if(vp)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+class HybridCache(NamedTuple):
+    mamba: ssm.SSMCache       # leaves stacked [L, ...]
+    k: jnp.ndarray            # [sites, B, T, Hkv, hd]
+    v: jnp.ndarray
+
+
+def attn_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if (cfg.window is not None and seq_len > cfg.window
+            and seq_len >= cfg.long_context_threshold):
+        return cfg.window
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> HybridCache:
+    g, per, tail = _struct(cfg)
+    t = attn_cache_len(cfg, seq_len)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    mc = ssm.init_block_cache(cfg, batch)
+    return HybridCache(
+        mamba=jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), mc),
+        k=jnp.zeros((g, batch, t, hkv, hd), jnp.dtype(cfg.dtype)),
+        v=jnp.zeros((g, batch, t, hkv, hd), jnp.dtype(cfg.dtype)),
+    )
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int, seq_len: int):
+    t = attn_cache_len(cfg, seq_len)
+    mc = ssm.block_cache_specs(cfg, ctx, batch)
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    kv = P(None, b_ax, ctx.model_if(t), None, None)
+    return HybridCache(
+        mamba=jax.tree.map(lambda s: P(None, *s), mc,
+                           is_leaf=lambda x: isinstance(x, P)),
+        k=kv, v=kv,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_attn(cfg, ap, x, positions, ctx, *, chunk=None, window=None,
+                 kv_cache=None, kv_pos=None, slot=None, kv_len=None):
+    """Returns (x_out, (k, v) or updated cache)."""
+    s = x.shape[1]
+    h = rms_norm(x, ap["attn_norm"], cfg.norm_eps)
+    q, k, v = dense._qkv(cfg, ap, h, positions, ctx)
+    if kv_cache is None:
+        o = dense._attention_remat(cfg, q, k, v, window=window, chunk=chunk)
+        new_kv = (k, v)
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        o = attn_lib.attention(q, ck, cv, q_pos=positions, kv_pos=kv_pos,
+                               causal=True, window=window, kv_len=kv_len)
+        new_kv = (ck, cv)
+    x = x + dense._attn_out(ap, o)
+    x = cst(x, _seq_spec(ctx, s), ctx)
+    hh = rms_norm(x, ap["mlp_norm"], cfg.norm_eps)
+    x = x + dense._mlp_tp(cfg, ap, hh, ctx)
+    return cst(x, _seq_spec(ctx, s), ctx), new_kv
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _split_groups(cfg, params):
+    g, per, tail = _struct(cfg)
+    grouped = jax.tree.map(
+        lambda x: x[: g * per].reshape((g, per) + x.shape[1:]), params["mamba"]
+    )
+    tail_p = jax.tree.map(lambda x: x[g * per:], params["mamba"])
+    return grouped, tail_p, g, per, tail
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=None, window=None):
+    b, s = tokens.shape
+    if chunk is None and s > 2048:
+        chunk = 2048
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+    grouped, tail_p, g, per, tail = _split_groups(cfg, params)
+    ap = params["shared_attn"]
+
+    def group_body(xc, gp):
+        def inner(xc2, bp):
+            y, _ = ssm.block_forward(cfg, bp, xc2)
+            return cst(y, _seq_spec(ctx, s), ctx), None
+
+        xc, _ = jax.lax.scan(inner, xc, gp)
+        xc, _ = _shared_attn(cfg, ap, xc, positions, ctx, chunk=chunk, window=window)
+        return xc, None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(body, x, grouped)
+    if tail:
+        def inner_tail(xc, bp):
+            y, _ = ssm.block_forward(cfg, bp, xc)
+            return cst(y, _seq_spec(ctx, s), ctx), None
+        x, _ = jax.lax.scan(inner_tail, x, tail_p)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return dense._logits(cfg, params, x, ctx)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, **kw):
+    logits = forward(cfg, params, batch["tokens"], ctx, **kw)
+    return token_xent(logits[:, :-1], batch["labels"][:, 1:], batch.get("weights"))
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=2048):
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+    grouped, tail_p, g, per, tail = _split_groups(cfg, params)
+    ap = params["shared_attn"]
+    window = cfg.window if (cfg.window and s > cfg.window) else None
+
+    def group_body(xc, gp):
+        def inner(xc2, bp):
+            y, c = ssm.block_forward(cfg, bp, xc2)
+            return cst(y, _seq_spec(ctx, s), ctx), c
+
+        xc, mcs = jax.lax.scan(inner, xc, gp)
+        xc, (k, v) = _shared_attn(cfg, ap, xc, positions, ctx, chunk=chunk,
+                                  window=window)
+        return xc, (mcs, k, v)
+
+    x, (mcs, ks, vs) = jax.lax.scan(group_body, x, grouped)
+    mcs = jax.tree.map(lambda t: t.reshape((g * per,) + t.shape[2:]), mcs)
+    if tail:
+        def inner_tail(xc, bp):
+            y, c = ssm.block_forward(cfg, bp, xc)
+            return cst(y, _seq_spec(ctx, s), ctx), c
+        x, mct = jax.lax.scan(inner_tail, x, tail_p)
+        mcs = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_], 0), mcs, mct)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = dense._logits(cfg, params, x, ctx)[:, 0]
+    return logits, HybridCache(mamba=mcs, k=ks, v=vs)
+
+
+def decode_step(cfg: ModelConfig, params, cache: HybridCache, token, pos, ctx=None):
+    b = token.shape[0]
+    t = cache.k.shape[2]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x.reshape(b, 1, -1)
+    positions = pos[None] if pos.ndim == 0 else pos
+    grouped_p, tail_p, g, per, tail = _struct_params(cfg, params)
+    ap = params["shared_attn"]
+    rolling = cfg.window is not None and t == cfg.window
+    slot = (pos % t) if rolling else pos
+    if rolling:
+        kv_pos = dense._rolling_kv_pos(pos, t)
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)
+    else:
+        kv_pos = jnp.arange(t)
+
+    mamba_grouped = jax.tree.map(
+        lambda x_: x_[: g * per].reshape((g, per) + x_.shape[1:]), cache.mamba
+    )
+    mamba_tail = jax.tree.map(lambda x_: x_[g * per:], cache.mamba)
+
+    def group_body(xc, scanned):
+        gp, mc, ck, cv = scanned
+
+        def inner(xc2, scanned2):
+            bp, c = scanned2
+            y, c_new = ssm.block_step(cfg, bp, xc2, c)
+            return y, c_new
+
+        xc, mc_new = jax.lax.scan(inner, xc, (gp, mc))
+        xc, (ck, cv) = _shared_attn(
+            cfg, ap, xc, positions, ctx,
+            window=cfg.window if rolling else None,
+            kv_cache=(ck, cv), kv_pos=kv_pos, slot=slot,
+            kv_len=None if rolling else pos + 1,
+        )
+        return xc, (mc_new, ck, cv)
+
+    x, (mcs, ks, vs) = jax.lax.scan(
+        group_body, x, (grouped_p, mamba_grouped, cache.k, cache.v)
+    )
+    mcs = jax.tree.map(lambda t_: t_.reshape((g * per,) + t_.shape[2:]), mcs)
+    if tail:
+        def inner_tail(xc, scanned2):
+            bp, c = scanned2
+            return ssm.block_step(cfg, bp, xc, c)
+        x, mct = jax.lax.scan(inner_tail, x, (tail_p, mamba_tail))
+        mcs = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_], 0), mcs, mct)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense._logits(cfg, params, x, ctx)[:, 0]
+    return logits, HybridCache(mamba=mcs, k=ks, v=vs)
+
+
+def _struct_params(cfg, params):
+    grouped, tail_p, g, per, tail = _split_groups(cfg, params)
+    return grouped, tail_p, g, per, tail

@@ -1,0 +1,66 @@
+"""The paper's model: multinomial logistic regression (M = 7850 for FMNIST).
+
+Also provides a small MLP for beyond-paper ablations. Both expose the
+SimModel interface consumed by ``repro.core.simulator``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SimModel(NamedTuple):
+    init: Callable  # key -> params
+    loss: Callable  # (params, x, y) -> scalar mean loss
+    accuracy: Callable  # (params, x, y) -> scalar accuracy
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def logistic_regression(dim: int = 784, num_classes: int = 10) -> SimModel:
+    def init(key):
+        return {
+            "w": jnp.zeros((dim, num_classes), jnp.float32),
+            "b": jnp.zeros((num_classes,), jnp.float32),
+        }
+
+    def logits(params, x):
+        return x @ params["w"] + params["b"]
+
+    def loss(params, x, y):
+        return _xent(logits(params, x), y)
+
+    def accuracy(params, x, y):
+        return jnp.mean((jnp.argmax(logits(params, x), -1) == y).astype(jnp.float32))
+
+    return SimModel(init, loss, accuracy)
+
+
+def mlp(dim: int = 784, hidden: int = 64, num_classes: int = 10) -> SimModel:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        s1 = 1.0 / jnp.sqrt(dim)
+        s2 = 1.0 / jnp.sqrt(hidden)
+        return {
+            "w1": jax.random.uniform(k1, (dim, hidden), jnp.float32, -s1, s1),
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": jax.random.uniform(k2, (hidden, num_classes), jnp.float32, -s2, s2),
+            "b2": jnp.zeros((num_classes,), jnp.float32),
+        }
+
+    def logits(params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def loss(params, x, y):
+        return _xent(logits(params, x), y)
+
+    def accuracy(params, x, y):
+        return jnp.mean((jnp.argmax(logits(params, x), -1) == y).astype(jnp.float32))
+
+    return SimModel(init, loss, accuracy)

@@ -1,0 +1,257 @@
+"""Qwen3-style MoE decoder (qwen3-moe-30b-a3b, qwen3-moe-235b-a22b).
+
+Attention is identical to the dense stack; the MLP is a 128-expert top-8
+mixture with a softmax router. Expert dispatch is *sort-based* (MegaBlocks
+style adapted to TPU/SPMD): per token-group, assignments are sorted by expert
+id and gathered into a fixed-capacity [E, C, D] buffer — no [tokens, E, C]
+one-hot dispatch einsum (which would be quadratic in sequence length; see
+DESIGN.md). Tokens beyond capacity are dropped (standard capacity-factor
+semantics); the router aux loss balances load so drops stay rare.
+
+Sharding: experts over the ``model`` axis (128/16 = 8 per shard), token groups
+over ``data`` — GSPMD inserts the all-to-all at the group<->expert boundary.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import dense
+from repro.models.dense import cst, _seq_spec
+from repro.models.layers import dense_init, rms_norm
+from repro.models.specs import ShardingCtx, pad_vocab
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = (tokens_per_group * cfg.experts_per_token * cfg.moe_capacity_factor
+         / cfg.num_experts)
+    return max(int(-(-c // 1)), 1)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    L, D, F, E = cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.num_experts
+    params = dense.init(cfg, key)
+    lyr = params["layers"]
+    for k in ("w_gate", "w_up", "w_down"):
+        del lyr[k]
+    ks = jax.random.split(jax.random.fold_in(key, 7), 4)
+    lyr["router"] = dense_init(ks[0], (L, D, E), jnp.float32)
+    lyr["we_gate"] = dense_init(ks[1], (L, E, D, F), dt)
+    lyr["we_up"] = dense_init(ks[2], (L, E, D, F), dt)
+    lyr["we_down"] = dense_init(ks[3], (L, E, F, D), dt, scale=1.0 / jnp.sqrt(D))
+    return params
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    specs = dense.param_specs(cfg, ctx)
+    lyr = specs["layers"]
+    for k in ("w_gate", "w_up", "w_down"):
+        del lyr[k]
+    e_ax = ctx.model_if(cfg.num_experts)
+    a = ctx.axes
+    lyr["router"] = P(None, None, None)
+    lyr["we_gate"] = P(None, e_ax, ctx.pdata, None)
+    lyr["we_up"] = P(None, e_ax, ctx.pdata, None)
+    lyr["we_down"] = P(None, e_ax, None, ctx.pdata)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Sort-based expert dispatch
+# ---------------------------------------------------------------------------
+
+
+def _route(cfg: ModelConfig, router_w, x):
+    """x [G, S, D] -> (gates [G, S, k], idx [G, S, k], aux_loss scalar)."""
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.clip(jnp.sum(gates, -1, keepdims=True), 1e-9)  # renorm
+    # Switch-style load-balance aux: E * sum_e (frac_tokens_e * mean_prob_e)
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=(0, 1))                       # [E]
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))                # [E]
+    aux = e * jnp.sum(me * ce)
+    return gates.astype(x.dtype), idx, aux
+
+
+def _dispatch_indices(cfg: ModelConfig, idx, cap: int):
+    """Per-group sort-based dispatch.
+
+    idx: [S, k] expert ids. Returns (token_slot [E, C] indices into the S*k
+    flat assignment list, valid [E, C] mask) — pure integer ops, no one-hot.
+    """
+    s, k = idx.shape
+    e = cfg.num_experts
+    flat = idx.reshape(-1)                                   # [S*k]
+    order = jnp.argsort(flat)                                # stable: token order kept
+    sorted_e = flat[order]
+    counts = jnp.bincount(flat, length=e)                    # [E]
+    starts = jnp.cumsum(counts) - counts                     # [E]
+    slots = starts[:, None] + jnp.arange(cap)[None, :]       # [E, C]
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(counts, cap)[:, None]
+    slots = jnp.clip(slots, 0, s * k - 1)
+    token_slot = order[slots]                                # flat assignment ids
+    return token_slot, valid
+
+
+def _ec_spec(ctx: Optional[ShardingCtx], cfg: ModelConfig):
+    """[G, E, C, D] dispatch-buffer spec: groups over data, experts over model."""
+    if ctx is None:
+        return None
+    return jax.sharding.PartitionSpec(
+        ctx.axes.data, ctx.model_if(cfg.num_experts), None, None)
+
+
+def moe_mlp(cfg: ModelConfig, lp, x, ctx: Optional[ShardingCtx]):
+    """x [B, S, D] -> (y [B, S, D], aux scalar). Groups = batch rows.
+
+    Written with explicit [G, E, C, D] axes (no vmap over the expert compute)
+    so the dispatch buffers carry sharding constraints — groups over ``data``,
+    experts over ``model`` — and GSPMD inserts the group<->expert all-to-all
+    instead of replicating tokens.
+    """
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    cap = capacity(cfg, s)
+    gates, idx, aux = _route(cfg, lp["router"], x)
+
+    # integer routing per group (cheap, local per data shard)
+    token_slot, valid = jax.vmap(
+        lambda idxg: _dispatch_indices(cfg, idxg, cap))(idx)   # [G, E, C]
+    tok = token_slot // k                                      # [G, E, C]
+
+    xe = jnp.take_along_axis(
+        x, tok.reshape(b, e * cap)[..., None], axis=1).reshape(b, e, cap, d)
+    xe = jnp.where(valid[..., None], xe, 0.0)
+    if ctx is not None and ctx.mesh is not None:
+        xe = cst(xe, _ec_spec(ctx, cfg), ctx)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, lp["we_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", xe, lp["we_up"])
+    ye = jnp.einsum("gecf,efd->gecd", g * u, lp["we_down"])    # [G, E, C, D]
+    gate_per_slot = jnp.take_along_axis(
+        gates.reshape(b, s * k), token_slot.reshape(b, e * cap), axis=1
+    ).reshape(b, e, cap)
+    ye = ye * (gate_per_slot * valid)[..., None]
+    if ctx is not None and ctx.mesh is not None:
+        ye = cst(ye, _ec_spec(ctx, cfg), ctx)
+
+    # combine: scatter-add back to token order (per group)
+    yg = jax.vmap(
+        lambda tokg, yeg: jnp.zeros((s, d), ye.dtype).at[tokg.reshape(-1)].add(
+            yeg.reshape(-1, d), mode="drop"))(tok, ye)
+    return cst(yg, _seq_spec(ctx, s), ctx), aux
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg, lp, x, positions, ctx, window, chunk):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, kk, v = dense._qkv(cfg, lp, h, positions, ctx)
+    o = dense._attention_remat(cfg, q, kk, v, window=window, chunk=chunk)
+    x = x + dense._attn_out(lp, o)
+    x = cst(x, _seq_spec(ctx, x.shape[1]), ctx)
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = moe_mlp(cfg, lp, h, ctx)
+    return x + y, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=None, window=None):
+    s = tokens.shape[1]
+    if chunk is None and s > 2048:
+        chunk = 2048
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+
+    def body(carry, lp):
+        xc, aux = carry
+        xc, a = _block(cfg, lp, xc, positions, ctx, window, chunk)
+        return (xc, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return dense._logits(cfg, params, x, ctx), aux / cfg.num_layers
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, *, chunk=None):
+    logits, aux = forward(cfg, params, batch["tokens"], ctx, chunk=chunk)
+    ce = dense.token_xent(logits[:, :-1], batch["labels"][:, 1:], batch.get("weights"))
+    return ce + cfg.moe_aux_coef * aux
+
+
+init_cache = dense.init_cache
+cache_specs = dense.cache_specs
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx=None, *, chunk=2048):
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+    window = cfg.window if (cfg.window and s > cfg.window) else None
+    from repro.models import attention as attn_lib
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = dense._qkv(cfg, lp, h, positions, ctx)
+        o = attn_lib.attention(q, k, v, causal=True, window=window, chunk=chunk)
+        xc = xc + dense._attn_out(lp, o)
+        xc = cst(xc, _seq_spec(ctx, s), ctx)
+        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_mlp(cfg, lp, h, ctx)
+        return cst(xc + y, _seq_spec(ctx, s), ctx), (k, v)
+
+    x, (ck, cv) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return dense._logits(cfg, params, x, ctx)[:, 0], {"k": ck, "v": cv}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
+    from repro.models import attention as attn_lib
+    b = token.shape[0]
+    t = cache["k"].shape[2]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x.reshape(b, 1, -1)
+    positions = pos[None] if pos.ndim == 0 else pos
+    rolling = cfg.window is not None and t == cfg.window
+    slot = (pos % t) if rolling else pos
+    if rolling:
+        kv_pos = dense._rolling_kv_pos(pos, t)
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)
+    else:
+        kv_pos = jnp.arange(t)
+
+    def body(xc, scanned):
+        lp, ck, cv = scanned
+        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = dense._qkv(cfg, lp, h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        o = attn_lib.attention(
+            q, ck, cv, q_pos=positions, kv_pos=kv_pos, causal=True,
+            window=cfg.window if rolling else None,
+            kv_len=None if rolling else pos + 1,
+        )
+        xc = xc + dense._attn_out(lp, o)
+        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_mlp(cfg, lp, h, ctx)
+        return xc + y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense._logits(cfg, params, x, ctx)[:, 0]
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,74 @@
+"""Mesh-axis abstraction + PartitionSpec helpers.
+
+Axis roles:
+  - ``data``  (optionally combined with ``pod``): FL-client / batch parallelism
+    AND FSDP-style parameter/optimizer sharding.
+  - ``model``: Megatron-style tensor parallelism (heads / d_ff / vocab /
+    experts / KV-sequence for decode split-K).
+
+Every model module builds its params and a *matching* PartitionSpec tree from
+these helpers, so pjit in/out shardings are derived mechanically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Logical -> physical axis mapping."""
+
+    data: Union[str, Tuple[str, ...]] = "data"   # ("pod","data") when multi-pod
+    model: str = "model"
+
+    @property
+    def batch(self):
+        return self.data
+
+    @classmethod
+    def for_mesh(cls, mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        if "pod" in names:
+            return cls(data=("pod", "data"), model="model")
+        return cls(data="data", model="model")
+
+
+SINGLE_POD = MeshAxes(data="data", model="model")
+MULTI_POD = MeshAxes(data=("pod", "data"), model="model")
+
+
+def replicated() -> P:
+    return P()
+
+
+def row_parallel(axes: MeshAxes) -> P:
+    """[in_dim, out_dim] with in_dim sharded on model (output needs psum)."""
+    return P(axes.model, None)
+
+
+def col_parallel(axes: MeshAxes) -> P:
+    """[in_dim, out_dim] with out_dim sharded on model."""
+    return P(None, axes.model)
+
+
+def fsdp_col(axes: MeshAxes) -> P:
+    """[in_dim, out_dim]: in_dim FSDP-sharded over data, out_dim over model."""
+    return P(axes.data, axes.model)
+
+
+def fsdp_row(axes: MeshAxes) -> P:
+    """[in_dim, out_dim]: in_dim over model, out_dim FSDP-sharded over data."""
+    return P(axes.model, axes.data)
+
+
+def stack(spec: P) -> P:
+    """Prepend the scanned-layer axis (unsharded)."""
+    return P(None, *spec)
+
+
+def batch_spec(axes: MeshAxes, ndim: int = 2) -> P:
+    """Activations/tokens [batch, ...] sharded over the data axes."""
+    return P(axes.batch, *([None] * (ndim - 1)))

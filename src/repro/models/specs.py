@@ -1,0 +1,88 @@
+"""Per-architecture PartitionSpec selection.
+
+The assigned architectures have head counts (14, 28, 48, ...) that are not all
+divisible by the 16-way ``model`` axis, so the TP layout is chosen *per
+tensor*: shard KV heads when they divide the axis, else query groups, else
+head_dim (which is a multiple of 16 for every assigned arch). This mirrors
+what production frameworks do — the TP layout is a per-model decision, not a
+constant.
+
+The residual stream between scanned layers is sequence-sharded over ``model``
+(Megatron-style sequence parallelism) so that remat-saved activations fit HBM
+at train_4k; GSPMD inserts the all-gather/reduce-scatter pair per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import MeshAxes
+
+VOCAB_PAD = 512  # LCM of every mesh axis product we deploy (16*16, 2*16*16)
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD) -> int:
+    return -(-v // multiple) * multiple
+
+
+class ShardingCtx:
+    """Axes + sizes of the target mesh; ``None`` means run unsharded (smoke)."""
+
+    def __init__(self, mesh=None, fsdp: bool = True):
+        """fsdp=False: parameters replicate over ``data`` (TP-only layout) —
+        kills the per-layer FSDP all-gather/reduce-scatter wire traffic at
+        the cost of params+grads being held once per data shard."""
+        self.mesh = mesh
+        self.fsdp = fsdp
+        if mesh is None:
+            self.axes = MeshAxes()
+            self.model_size = 1
+            self.data_size = 1
+        else:
+            self.axes = MeshAxes.for_mesh(mesh)
+            shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self.model_size = shape.get("model", 1)
+            d = shape.get("data", 1)
+            if "pod" in shape:
+                d *= shape["pod"]
+            self.data_size = d
+
+    # --- axis pickers ------------------------------------------------------
+
+    @property
+    def pdata(self):
+        """The data axis for PARAMETER sharding (None in TP-only mode)."""
+        return self.axes.data if self.fsdp else None
+
+    def pdata_if(self, dim: int):
+        return self.data_if(dim) if self.fsdp else None
+
+    def model_if(self, dim: int):
+        """Return the model axis name iff dim divides by it."""
+        return self.axes.model if dim % max(self.model_size, 1) == 0 else None
+
+    def data_if(self, dim: int):
+        return self.axes.data if dim % max(self.data_size, 1) == 0 else None
+
+    def attn_q_spec(self, hkv: int, group: int, hd: int) -> P:
+        """wq [D, Hkv, G, hd]: shard exactly one head-ish dim over model."""
+        d_ax = self.pdata
+        if hkv % max(self.model_size, 1) == 0 and hkv >= self.model_size:
+            return P(d_ax, self.axes.model, None, None)
+        if group % max(self.model_size, 1) == 0 and group >= self.model_size:
+            return P(d_ax, None, self.axes.model, None)
+        return P(d_ax, None, None, self.axes.model)  # head_dim sharding
+
+    def attn_kv_spec(self, hkv: int, hd: int) -> P:
+        """wk/wv [D, Hkv, hd]."""
+        d_ax = self.pdata
+        if hkv % max(self.model_size, 1) == 0 and hkv >= self.model_size:
+            return P(d_ax, self.axes.model, None)
+        return P(d_ax, None, self.axes.model)
+
+    def attn_o_spec(self, hkv: int, group: int, hd: int) -> P:
+        """wo [Hkv, G, hd, D]: mirror the q sharding, D over data."""
+        q = self.attn_q_spec(hkv, group, hd)
+        return P(q[1], q[2], q[3], self.pdata)

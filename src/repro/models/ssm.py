@@ -1,0 +1,279 @@
+"""Mamba2 (SSD) block — chunked scan formulation, TPU-native.
+
+The SSD recurrence per head h (state S in R^{N x P}):
+
+    S_t = exp(dt_t * a_h) * S_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . S_t + D_h * x_t
+
+is computed chunk-parallel: within a chunk the contribution is a masked
+quadratic form (the "attention-like" term of the SSD duality); across chunks
+a ``lax.scan`` carries the [B, H, N, P] state. The chunk length bounds the
+materialized score block (the same trick as online-softmax attention) and the
+sequential dependency stays on-chip.
+
+Sharding: d_inner (and hence heads) over ``model``; B/C projections (small,
+N=64-128) replicated; out_proj row-parallel with a psum folded by GSPMD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.specs import ShardingCtx
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    return d_inner, heads, cfg.ssm_headdim, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Params (one block; stacking over layers is done by the caller)
+# ---------------------------------------------------------------------------
+
+
+def block_init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    d_inner, H, Pd, N = dims(cfg)
+    W = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((D,), dt),
+        "w_x": dense_init(ks[0], (D, d_inner), dt),
+        "w_z": dense_init(ks[1], (D, d_inner), dt),
+        "w_B": dense_init(ks[2], (D, N), dt),
+        "w_C": dense_init(ks[3], (D, N), dt),
+        "w_dt": dense_init(ks[4], (D, H), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # a = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_x": dense_init(ks[5], (W, d_inner), dt, scale=1.0 / W),
+        "conv_B": dense_init(ks[6], (W, N), dt, scale=1.0 / W),
+        "conv_C": dense_init(ks[7], (W, N), dt, scale=1.0 / W),
+        "out_norm": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(jax.random.fold_in(key, 9), (d_inner, D), dt,
+                            scale=1.0 / jnp.sqrt(D)),
+    }
+
+
+def block_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    a = ctx.axes
+    d_inner, H, Pd, N = dims(cfg)
+    m_in = ctx.model_if(d_inner)
+    m_h = ctx.model_if(H)
+    return {
+        "norm": P(None),
+        "w_x": P(ctx.pdata, m_in),
+        "w_z": P(ctx.pdata, m_in),
+        "w_B": P(ctx.pdata, None),
+        "w_C": P(ctx.pdata, None),
+        "w_dt": P(ctx.pdata, m_h),
+        "dt_bias": P(m_h),
+        "A_log": P(m_h),
+        "D_skip": P(m_h),
+        "conv_x": P(None, m_in),
+        "conv_B": P(None, None),
+        "conv_C": P(None, None),
+        "out_norm": P(m_in),
+        "w_out": P(m_in, ctx.pdata),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray] = None):
+    """x [B, S, C], w [W, C] depthwise causal conv; ``tail`` [B, W-1, C] is the
+    carry-in from previous tokens (decode). Returns (y [B, S, C], new tail)."""
+    width = w.shape[0]
+    b = x.shape[0]
+    if tail is None:
+        tail = jnp.zeros((b, width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i]
+        for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1):, :]
+    return jax.nn.silu(y), new_tail
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(xh, dt, a, Bm, Cm, chunk: int, state0=None, remat: bool = False):
+    """Chunk-parallel SSD.
+
+    xh: [B, S, H, P] inputs; dt: [B, S, H] (post-softplus); a: [H] (negative);
+    Bm, Cm: [B, S, N] (single group shared across heads).
+    Returns (y [B, S, H, P], final state [B, H, N, P]).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # fold dt into the input; per-step log decay
+    xdt = (xh * dt[..., None]).astype(jnp.float32)
+    la = (dt * a).astype(jnp.float32)                       # [B, S', H] (<= 0)
+
+    def reshape_c(t):
+        return t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, lac, Bc, Cc = map(reshape_c, (xdt, la, Bm.astype(jnp.float32),
+                                      Cm.astype(jnp.float32)))
+    # xc: [nc, B, q, H, P]; lac: [nc, B, q, H]; Bc/Cc: [nc, B, q, N]
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def chunk_step(state, inp):
+        xq, laq, Bq, Cq = inp
+        cum = jnp.cumsum(laq, axis=1)                       # [B, q, H]
+        total = cum[:, -1]                                  # [B, H]
+        # --- inter-chunk: y_prev[t] = C_t . (decay_to_t * S_in)
+        decay_in = jnp.exp(cum)                             # [B, q, H]
+        y_prev = jnp.einsum("bqn,bhnp->bqhp", Cq, state) * decay_in[..., None]
+        # --- intra-chunk quadratic term
+        rel = cum[:, :, None, :] - cum[:, None, :, :]       # [B, q, t, H]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bqn,btn->bqt", Cq, Bq)[..., None] * gate
+        y_intra = jnp.einsum("bqth,bthp->bqhp", scores, xq)
+        # --- state passing
+        decay_out = jnp.exp(total[:, None, :] - cum)        # [B, q, H]
+        s_new = jnp.exp(total)[:, :, None, None] * state + jnp.einsum(
+            "bqn,bqhp->bhnp", Bq, xq * decay_out[..., None]
+        )
+        return s_new, y_prev + y_intra
+
+    if remat:
+        # save only the [B,H,N,P] state per chunk; recompute the quadratic
+        # block in backward (see dense._attention_remat)
+        chunk_step = jax.checkpoint(chunk_step)
+    state, yc = jax.lax.scan(chunk_step, state0, (xc, lac, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * q, h, p)[:, :s]
+    return y, state
+
+
+def ssd_step(state, x1, dt1, a, B1, C1):
+    """Single-token recurrence (decode). x1 [B, H, P]; dt1 [B, H]; B1/C1 [B, N]."""
+    decay = jnp.exp(dt1 * a)                                # [B, H]
+    upd = jnp.einsum("bn,bhp->bhnp", B1.astype(jnp.float32),
+                     (x1 * dt1[..., None]).astype(jnp.float32))
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", C1.astype(jnp.float32), state)
+    return state, y
+
+
+# ---------------------------------------------------------------------------
+# Full block forward / step
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray   # [B, H, N, P] fp32
+    conv_x: jnp.ndarray  # [B, W-1, d_inner]
+    conv_B: jnp.ndarray  # [B, W-1, N]
+    conv_C: jnp.ndarray  # [B, W-1, N]
+
+
+def init_block_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    d_inner, H, Pd, N = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    W = cfg.conv_width
+    return SSMCache(
+        state=jnp.zeros((batch, H, N, Pd), jnp.float32),
+        conv_x=jnp.zeros((batch, W - 1, d_inner), dt),
+        conv_B=jnp.zeros((batch, W - 1, N), dt),
+        conv_C=jnp.zeros((batch, W - 1, N), dt),
+    )
+
+
+def block_cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int) -> SSMCache:
+    d_inner, H, Pd, N = dims(cfg)
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    return SSMCache(
+        state=P(b_ax, ctx.model_if(H), None, None),
+        conv_x=P(b_ax, None, ctx.model_if(d_inner)),
+        conv_B=P(b_ax, None, None),
+        conv_C=P(b_ax, None, None),
+    )
+
+
+def _proj(cfg, bp, u):
+    """Shared projection head: u is the normed input [B, S, D]."""
+    d_inner, H, Pd, N = dims(cfg)
+    xin = jnp.einsum("bsd,di->bsi", u, bp["w_x"])
+    z = jnp.einsum("bsd,di->bsi", u, bp["w_z"])
+    Bm = jnp.einsum("bsd,dn->bsn", u, bp["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", u, bp["w_C"])
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, bp["w_dt"]).astype(jnp.float32) + bp["dt_bias"]
+    )
+    return xin, z, Bm, Cm, dtv
+
+
+def block_forward(cfg: ModelConfig, bp: dict, x: jnp.ndarray,
+                  cache: Optional[SSMCache] = None):
+    """One Mamba2 block (pre-norm residual). x [B, S, D].
+
+    Returns (x_out, new_cache) — cache is threaded for chunked prefill and
+    carried into decode.
+    """
+    b, s, _ = x.shape
+    d_inner, H, Pd, N = dims(cfg)
+    u = rms_norm(x, bp["norm"], cfg.norm_eps)
+    xin, z, Bm, Cm, dtv = _proj(cfg, bp, u)
+    tails = (None, None, None) if cache is None else (cache.conv_x, cache.conv_B, cache.conv_C)
+    xin, t_x = causal_conv(xin, bp["conv_x"], tails[0])
+    Bm, t_B = causal_conv(Bm, bp["conv_B"], tails[1])
+    Cm, t_C = causal_conv(Cm, bp["conv_C"], tails[2])
+    xh = xin.reshape(b, s, H, Pd)
+    a = -jnp.exp(bp["A_log"])
+    state0 = None if cache is None else cache.state
+    y, state = ssd_scan(xh, dtv, a, Bm, Cm, cfg.ssm_chunk, state0,
+                        remat=cfg.remat and cache is None)
+    y = y + bp["D_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, bp["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, bp["w_out"])
+    return x + out, SSMCache(state, t_x, t_B, t_C)
+
+
+def block_step(cfg: ModelConfig, bp: dict, x: jnp.ndarray, cache: SSMCache):
+    """Single-token decode. x [B, 1, D] -> (y [B, 1, D], cache)."""
+    b = x.shape[0]
+    d_inner, H, Pd, N = dims(cfg)
+    u = rms_norm(x, bp["norm"], cfg.norm_eps)
+    xin, z, Bm, Cm, dtv = _proj(cfg, bp, u)
+    xin, t_x = causal_conv(xin, bp["conv_x"], cache.conv_x)
+    Bm, t_B = causal_conv(Bm, bp["conv_B"], cache.conv_B)
+    Cm, t_C = causal_conv(Cm, bp["conv_C"], cache.conv_C)
+    xh = xin.reshape(b, H, Pd)
+    a = -jnp.exp(bp["A_log"])
+    state, y = ssd_step(cache.state, xh, dtv[:, 0], a, Bm[:, 0], Cm[:, 0])
+    y = y + bp["D_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, bp["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, bp["w_out"])
+    return x + out, SSMCache(state, t_x, t_B, t_C)

@@ -1,0 +1,285 @@
+"""Llama-3.2-Vision-style VLM decoder [hf:meta-llama/Llama-3.2-11B-Vision].
+
+The language backbone: groups of (cross_attn_every-1) self-attention layers
+followed by one gated cross-attention layer over precomputed image patch
+embeddings. The ViT vision encoder + projector frontend is STUBBED per the
+assignment carve-out — ``images`` in every batch are [B, num_image_tokens,
+d_model] embeddings (``input_specs()`` supplies the ShapeDtypeStruct).
+
+Cross-attention layers are tanh-gated (zero-init gates, as in Llama-3.2) so
+the model starts as a pure LM.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import dense
+from repro.models.dense import cst, _seq_spec, token_xent
+from repro.models.layers import dense_init, embed_init, rms_norm, swiglu
+from repro.models.specs import ShardingCtx, pad_vocab
+
+
+def _struct(cfg: ModelConfig):
+    per = cfg.cross_attn_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per - 1  # (groups, self-layers per group)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _self_layer_init(cfg, key):
+    p = dense.init(cfg.with_(num_layers=1), key)["layers"]
+    return jax.tree.map(lambda x: x[0], p)
+
+
+def _cross_layer_init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    ks = jax.random.split(key, 8)
+    return {
+        "attn_norm": jnp.ones((D,), dt),
+        "kv_norm": jnp.ones((D,), dt),
+        "wq": dense_init(ks[0], (D, hkv, g, hd), dt),
+        "wk": dense_init(ks[1], (D, hkv, hd), dt),
+        "wv": dense_init(ks[2], (D, hkv, hd), dt),
+        "wo": dense_init(ks[3], (hkv, g, hd, D), dt, scale=1.0 / jnp.sqrt(D)),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "mlp_norm": jnp.ones((D,), dt),
+        "w_gate": dense_init(ks[4], (D, F), dt),
+        "w_up": dense_init(ks[5], (D, F), dt),
+        "w_down": dense_init(ks[6], (F, D), dt, scale=1.0 / jnp.sqrt(D)),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    vp = pad_vocab(cfg.vocab_size)
+    G, M = _struct(cfg)
+    ks = jax.random.split(key, 5)
+    self_layers = jax.vmap(
+        lambda kr: jax.vmap(lambda kk: _self_layer_init(cfg, kk))(
+            jax.random.split(kr, M))
+    )(jax.random.split(ks[1], G))
+    cross_layers = jax.vmap(lambda k: _cross_layer_init(cfg, k))(
+        jax.random.split(ks[2], G))
+    return {
+        "embed": embed_init(ks[0], (vp, cfg.d_model), dt),
+        "self_layers": self_layers,     # [G, M, ...]
+        "cross_layers": cross_layers,   # [G, ...]
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[3], (cfg.d_model, vp), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    vp = pad_vocab(cfg.vocab_size)
+    lyr = dense.param_specs(cfg, ctx)["layers"]
+    lyr = {k: P(*s[1:]) for k, s in lyr.items()}  # drop the stacked-L axis
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // hkv
+    a = ctx.axes
+    cross = {
+        "attn_norm": P(None),
+        "kv_norm": P(None),
+        "wq": ctx.attn_q_spec(hkv, g, hd),
+        "wk": ctx.attn_kv_spec(hkv, hd),
+        "wv": ctx.attn_kv_spec(hkv, hd),
+        "wo": ctx.attn_o_spec(hkv, g, hd),
+        "gate_attn": P(),
+        "mlp_norm": P(None),
+        "w_gate": P(ctx.pdata, a.model),
+        "w_up": P(ctx.pdata, a.model),
+        "w_down": P(a.model, ctx.pdata),
+        "gate_mlp": P(),
+    }
+    return {
+        "embed": P(ctx.model_if(vp), ctx.pdata_if(cfg.d_model)),
+        "self_layers": jax.tree.map(lambda s: P(None, None, *s), lyr,
+                                    is_leaf=lambda x: isinstance(x, P)),
+        "cross_layers": jax.tree.map(lambda s: P(None, *s), cross,
+                                     is_leaf=lambda x: isinstance(x, P)),
+        "final_norm": P(None),
+        "lm_head": P(ctx.pdata_if(cfg.d_model), ctx.model_if(vp)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention layer
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(cfg, cp, images):
+    """Image embeddings [B, I, D] -> (k, v) [B, I, Hkv, hd]."""
+    img = rms_norm(images, cp["kv_norm"], cfg.norm_eps)
+    k = jnp.einsum("bid,dkh->bikh", img, cp["wk"])
+    v = jnp.einsum("bid,dkh->bikh", img, cp["wv"])
+    return k, v
+
+
+def _cross_layer(cfg, cp, x, kv, ctx):
+    s = x.shape[1]
+    h = rms_norm(x, cp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dkgh->bskgh", h, cp["wq"])
+    k, v = kv
+    o = attn_lib.attention(q, k, v, causal=False)
+    g_attn = jnp.tanh(cp["gate_attn"]).astype(x.dtype)  # keep bf16 residual
+    x = x + g_attn * dense._attn_out(cp, o)
+    x = cst(x, _seq_spec(ctx, s), ctx)
+    h = rms_norm(x, cp["mlp_norm"], cfg.norm_eps)
+    g_mlp = jnp.tanh(cp["gate_mlp"]).astype(x.dtype)
+    x = x + g_mlp * swiglu(h, cp["w_gate"], cp["w_up"], cp["w_down"])
+    return cst(x, _seq_spec(ctx, s), ctx)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, tokens, images, ctx=None, *, chunk=None,
+            window=None):
+    b, s = tokens.shape
+    if chunk is None and s > 2048:
+        chunk = 2048
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+    images = images.astype(jnp.dtype(cfg.dtype))
+
+    def group_body(xc, scanned):
+        gp_self, gp_cross = scanned
+
+        def inner(xc2, lp):
+            return dense.decoder_layer(cfg, lp, xc2, positions, ctx,
+                                       window=window, chunk=chunk), None
+
+        xc, _ = jax.lax.scan(inner, xc, gp_self)
+        kv = _cross_kv(cfg, gp_cross, images)
+        xc = _cross_layer(cfg, gp_cross, xc, kv, ctx)
+        return xc, None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(body, x, (params["self_layers"], params["cross_layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return dense._logits(cfg, params, x, ctx)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, **kw):
+    logits = forward(cfg, params, batch["tokens"], batch["images"], ctx, **kw)
+    return token_xent(logits[:, :-1], batch["labels"][:, 1:], batch.get("weights"))
+
+
+class VLMCache(NamedTuple):
+    k: jnp.ndarray        # self-attn [L_self_total=G*M, B, T, Hkv, hd]
+    v: jnp.ndarray
+    xk: jnp.ndarray       # cross-attn (static) [G, B, I, Hkv, hd]
+    xv: jnp.ndarray
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> VLMCache:
+    G, M = _struct(cfg)
+    t = dense.cache_len(cfg, seq_len)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return VLMCache(
+        k=jnp.zeros((G, M, batch, t, hkv, hd), dt),
+        v=jnp.zeros((G, M, batch, t, hkv, hd), dt),
+        xk=jnp.zeros((G, batch, cfg.num_image_tokens, hkv, hd), dt),
+        xv=jnp.zeros((G, batch, cfg.num_image_tokens, hkv, hd), dt),
+    )
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int, seq_len: int):
+    t = dense.cache_len(cfg, seq_len)
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    kv = P(None, None, b_ax, ctx.model_if(t), None, None)
+    xkv = P(None, b_ax, None, None, None)
+    return VLMCache(k=kv, v=kv, xk=xkv, xv=xkv)
+
+
+def prefill(cfg: ModelConfig, params, tokens, images, ctx=None, *, chunk=2048):
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = dense._embed(cfg, params, tokens, ctx)
+    images = images.astype(jnp.dtype(cfg.dtype))
+    window = cfg.window if (cfg.window and s > cfg.window) else None
+
+    def group_body(xc, scanned):
+        gp_self, gp_cross = scanned
+
+        def inner(xc2, lp):
+            h = rms_norm(xc2, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = dense._qkv(cfg, lp, h, positions)
+            o = attn_lib.attention(q, k, v, causal=True, window=window, chunk=chunk)
+            xc2 = xc2 + dense._attn_out(lp, o)
+            xc2 = cst(xc2, _seq_spec(ctx, s), ctx)
+            h = rms_norm(xc2, lp["mlp_norm"], cfg.norm_eps)
+            xc2 = xc2 + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+            return cst(xc2, _seq_spec(ctx, s), ctx), (k, v)
+
+        xc, (ks, vs) = jax.lax.scan(inner, xc, gp_self)
+        kv = _cross_kv(cfg, gp_cross, images)
+        xc = _cross_layer(cfg, gp_cross, xc, kv, ctx)
+        return xc, (ks, vs, kv[0], kv[1])
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(
+        group_body, x, (params["self_layers"], params["cross_layers"]))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = dense._logits(cfg, params, x, ctx)[:, 0]
+    return logits, VLMCache(k=ks, v=vs, xk=xks, xv=xvs)
+
+
+def decode_step(cfg: ModelConfig, params, cache: VLMCache, token, pos, ctx=None):
+    b = token.shape[0]
+    t = cache.k.shape[3]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x.reshape(b, 1, -1)
+    positions = pos[None] if pos.ndim == 0 else pos
+    rolling = cfg.window is not None and t == cfg.window
+    slot = (pos % t) if rolling else pos
+    if rolling:
+        kv_pos = dense._rolling_kv_pos(pos, t)
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)
+    else:
+        kv_pos = jnp.arange(t)
+
+    def group_body(xc, scanned):
+        gp_self, gp_cross, ck, cv, xk, xv = scanned
+
+        def inner(xc2, scanned2):
+            lp, ckl, cvl = scanned2
+            h = rms_norm(xc2, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = dense._qkv(cfg, lp, h, positions)
+            ckl = jax.lax.dynamic_update_slice_in_dim(ckl, k, slot, axis=1)
+            cvl = jax.lax.dynamic_update_slice_in_dim(cvl, v, slot, axis=1)
+            o = attn_lib.attention(
+                q, ckl, cvl, q_pos=positions, kv_pos=kv_pos, causal=True,
+                window=cfg.window if rolling else None,
+                kv_len=None if rolling else pos + 1)
+            xc2 = xc2 + dense._attn_out(lp, o)
+            h = rms_norm(xc2, lp["mlp_norm"], cfg.norm_eps)
+            xc2 = xc2 + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+            return xc2, (ckl, cvl)
+
+        xc, (ck, cv) = jax.lax.scan(inner, xc, (gp_self, ck, cv))
+        xc = _cross_layer(cfg, gp_cross, xc, (xk, xv), ctx)
+        return xc, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x,
+        (params["self_layers"], params["cross_layers"],
+         cache.k, cache.v, cache.xk, cache.xv))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense._logits(cfg, params, x, ctx)[:, 0]
+    return logits, VLMCache(k=ks, v=vs, xk=cache.xk, xv=cache.xv)

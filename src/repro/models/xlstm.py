@@ -1,0 +1,548 @@
+"""xLSTM (mLSTM + sLSTM) language model [arXiv:2405.04517].
+
+Block layout: ``num_layers`` organized in super-blocks of ``slstm_group``
+layers — (slstm_group-1) mLSTM blocks followed by 1 sLSTM block — scanned as
+one homogeneous unit, so the HLO stays one-super-block sized.
+
+mLSTM: matrix memory C in R^{dk x dv} per head with exp input gate and
+sigmoid forget gate, computed *chunkwise-parallel* (same duality as SSD:
+intra-chunk masked quadratic + inter-chunk recurrent state), normalizer
+n with the xLSTM max(|q.n|, 1) denominator. The exp input gate is clipped at
+IGATE_CLIP in log space (numerically-lightened variant of the paper's running
+max stabilizer; DESIGN.md records the deviation).
+
+sLSTM: scalar memory per head-channel with recurrent gate contributions and
+the paper's exact m-stabilizer, a true sequential ``lax.scan`` over time (the
+part of xLSTM that cannot be parallelized — kept on-chip).
+
+Sharding: mLSTM value/state dv over ``model``; sLSTM is replicated over
+``model`` (small params, 1/slstm_group of layers) and batch-parallel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.dense import _embed, _logits, cst, token_xent
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.models.specs import ShardingCtx, pad_vocab
+
+IGATE_CLIP = 8.0
+
+
+def mdims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.num_heads
+    return d_inner, h, d_inner // h  # (d_inner, H, dv=dk)
+
+
+def sdims(cfg: ModelConfig):
+    h = cfg.num_heads
+    return h, cfg.d_model // h  # (H, d)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    d_inner, H, dh = mdims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((D,), dt),
+        "wq": dense_init(ks[0], (D, H, dh), dt),
+        "wk": dense_init(ks[1], (D, H, dh), dt),
+        "wv": dense_init(ks[2], (D, H, dh), dt),
+        "w_i": dense_init(ks[3], (D, H), jnp.float32),
+        "w_f": dense_init(ks[4], (D, H), jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # open forget gate at init
+        "w_og": dense_init(ks[5], (D, d_inner), dt),
+        "out_norm": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[6], (d_inner, D), dt, scale=1.0 / jnp.sqrt(D)),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    a = ctx.axes
+    d_inner, H, dh = mdims(cfg)
+    m_v = ctx.model_if(dh)
+    return {
+        "norm": P(None),
+        "wq": P(ctx.pdata, None, None),
+        "wk": P(ctx.pdata, None, None),
+        "wv": P(ctx.pdata, None, m_v),
+        "w_i": P(ctx.pdata, None),
+        "w_f": P(ctx.pdata, None),
+        "b_i": P(None),
+        "b_f": P(None),
+        "w_og": P(ctx.pdata, ctx.model_if(d_inner)),
+        "out_norm": P(ctx.model_if(d_inner)),
+        "w_out": P(ctx.model_if(d_inner), ctx.pdata),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray  # [B, H, dk, dv] fp32
+    n: jnp.ndarray  # [B, H, dk]    fp32
+
+
+def mlstm_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    _, H, dh = mdims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+    )
+
+
+def mlstm_cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int) -> MLSTMCache:
+    _, H, dh = mdims(cfg)
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    return MLSTMCache(C=P(b_ax, None, None, ctx.model_if(dh)), n=P(b_ax, None, None))
+
+
+def _mlstm_gates(bp, u):
+    li = jnp.einsum("bsd,dh->bsh", u.astype(jnp.float32), bp["w_i"]) + bp["b_i"]
+    lf = jnp.einsum("bsd,dh->bsh", u.astype(jnp.float32), bp["w_f"]) + bp["b_f"]
+    li = jnp.clip(li, a_max=IGATE_CLIP)
+    return li, jax.nn.log_sigmoid(lf)
+
+
+def mlstm_scan(q, k, v, log_i, log_f, chunk: int, cache: Optional[MLSTMCache],
+               remat: bool = False, ctx=None):
+    """Chunkwise mLSTM. q/k/v [B,S,H,dh]; log_i/log_f [B,S,H]. fp32 inside.
+
+    The [B, H, dk, dv] matrix state is explicitly constrained to dv-over-
+    ``model`` sharding inside the scan — without it GSPMD reshards the 268MB
+    (at 1.3B-scale) state every chunk, turning the scan collective-bound."""
+    b, s, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh)
+    qc = min(chunk, s)
+    nc = -(-s // qc)
+    pad = nc * qc - s
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, z4) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def rc(t):
+        return t.reshape((b, nc, qc) + t.shape[2:]).swapaxes(0, 1)
+
+    # keep chunk inputs in model dtype; cast to fp32 INSIDE the step so the
+    # scan's saved xs are bf16 (2x smaller) — the math still runs fp32
+    qcs, kcs, vcs = (rc(t) for t in (q, k, v))
+    lic, lfc = rc(log_i), rc(log_f)
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32) if cache is None else cache.C
+    n0 = jnp.zeros((b, h, dh), jnp.float32) if cache is None else cache.n
+
+    def _cst_state(C, n):
+        if ctx is None or ctx.mesh is None:
+            return C, n
+        from repro.models.dense import cst
+        C = cst(C, P(ctx.axes.data if C.shape[0] > 1 else None, None, None,
+                     ctx.model_if(C.shape[-1])), ctx)
+        n = cst(n, P(ctx.axes.data if n.shape[0] > 1 else None, None, None),
+                ctx)
+        return C, n
+
+    def step(carry, inp):
+        C, n = carry
+        C, n = _cst_state(C, n)
+        qq, kk, vv, li, lf = inp
+        qq, kk, vv = (t.astype(jnp.float32) for t in (qq, kk, vv))
+        cum = jnp.cumsum(lf, axis=1)                       # [B, q, H]
+        total = cum[:, -1]
+        dec_in = jnp.exp(cum)                              # decay applied to carry-in
+        y_prev = jnp.einsum("bqhk,bhkv->bqhv", qq * dec_in[..., None], C) * scale
+        n_prev = jnp.einsum("bqhk,bhk->bqh", qq * dec_in[..., None], n) * scale
+        rel = cum[:, :, None, :] - cum[:, None, :, :]      # [B, q, t, H]
+        g = rel + li[:, None, :, :]                        # + log i_t
+        mask = jnp.tril(jnp.ones((qc, qc), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(g), 0.0)
+        scores = jnp.einsum("bqhk,bthk->bqth", qq, kk) * scale * gate
+        y_intra = jnp.einsum("bqth,bthv->bqhv", scores, vv)
+        # normalizer: n_q = dec_in*n0 + sum_{t<=q} exp(cum_q-cum_t+li_t) k_t
+        kgate = jnp.einsum("bqth,bthk->bqhk", gate, kk)
+        dec_out = jnp.exp(total[:, None, :] - cum) * jnp.exp(li)   # [B, q, H]
+        C_new = jnp.exp(total)[:, :, None, None] * C + jnp.einsum(
+            "bqhk,bqhv->bhkv", kk * dec_out[..., None], vv
+        )
+        n_new = jnp.exp(total)[:, :, None] * n + jnp.einsum(
+            "bqh,bqhk->bhk", dec_out, kk
+        )
+        n_q = dec_in[..., None] * n[:, None] + kgate
+        qn = jnp.einsum("bqhk,bqhk->bqh", qq, n_q) * scale
+        denom = jnp.maximum(jnp.abs(qn), 1.0)
+        y = (y_prev + y_intra) / denom[..., None]
+        C_new, n_new = _cst_state(C_new, n_new)
+        return (C_new, n_new), y
+
+    if remat:
+        step = jax.checkpoint(step)  # see dense._attention_remat
+    (C, n), yc = jax.lax.scan(step, (C0, n0), (qcs, kcs, vcs, lic, lfc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * qc, h, dh)[:, :s]
+    return y, MLSTMCache(C, n)
+
+
+def mlstm_step(cache: MLSTMCache, q, k, v, log_i, log_f):
+    """Single token. q/k/v [B,H,dh]; log_i/log_f [B,H]."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(dh)
+    f = jnp.exp(log_f)[..., None]
+    i = jnp.exp(log_i)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    C = f[..., None] * cache.C + i[..., None] * k32[..., :, None] * v32[..., None, :]
+    n = f * cache.n + i * k32
+    num = jnp.einsum("bhk,bhkv->bhv", q32, C) * scale
+    qn = jnp.einsum("bhk,bhk->bh", q32, n) * scale
+    y = num / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    return MLSTMCache(C, n), y
+
+
+def mlstm_block(cfg, bp, x, chunk, cache: Optional[MLSTMCache],
+                single: bool = False, ctx=None):
+    b, s, D = x.shape
+    d_inner, H, dh = mdims(cfg)
+    u = rms_norm(x, bp["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", u, bp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", u, bp["wk"])
+    v = jnp.einsum("bsd,dhv->bshv", u, bp["wv"])
+    li, lf = _mlstm_gates(bp, u)
+    if single:
+        new_cache, y = mlstm_step(cache, q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0])
+        y = y[:, None]
+    else:
+        y, new_cache = mlstm_scan(q, k, v, li, lf, chunk, cache,
+                                  remat=cache is None, ctx=ctx)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,di->bsi", u, bp["w_og"]).astype(jnp.float32))
+    y = y.reshape(b, s, d_inner) * og
+    y = rms_norm(y.astype(x.dtype), bp["out_norm"], cfg.norm_eps)
+    return x + jnp.einsum("bsi,id->bsd", y, bp["w_out"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    H, d = sdims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((D,), dt),
+        "w_gates": dense_init(ks[0], (D, 4, H, d), jnp.float32),   # i, f, z, o
+        "r_gates": dense_init(ks[1], (H, d, 4, d), jnp.float32,
+                              scale=1.0 / jnp.sqrt(d)),
+        "b_gates": jnp.zeros((4, H, d), jnp.float32),
+        "out_norm": jnp.ones((D,), dt),
+        "w_out": dense_init(ks[2], (D, D), dt, scale=1.0 / jnp.sqrt(D)),
+        "w_up": dense_init(ks[3], (D, 2 * D), dt),
+        "w_down": dense_init(jax.random.fold_in(key, 5), (2 * D, D), dt,
+                             scale=1.0 / jnp.sqrt(D)),
+    }
+
+
+def slstm_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    a = ctx.axes
+    return {
+        "norm": P(None),
+        "w_gates": P(ctx.pdata, None, None, None),
+        "r_gates": P(None, None, None, None),
+        "b_gates": P(None, None, None),
+        "out_norm": P(None),
+        "w_out": P(ctx.pdata, None),
+        "w_up": P(ctx.pdata, ctx.model_if(2 * cfg.d_model)),
+        "w_down": P(ctx.model_if(2 * cfg.d_model), ctx.pdata),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    h: jnp.ndarray  # [B, H, d]
+    c: jnp.ndarray
+    n: jnp.ndarray
+    m: jnp.ndarray
+
+
+def slstm_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    H, d = sdims(cfg)
+    z = jnp.zeros((batch, H, d), jnp.float32)
+    return SLSTMCache(h=z, c=z, n=z, m=jnp.full((batch, H, d), -1e30, jnp.float32))
+
+
+def slstm_cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int) -> SLSTMCache:
+    b_ax = ctx.data_if(batch) if batch > 1 else None
+    s = P(b_ax, None, None)
+    return SLSTMCache(h=s, c=s, n=s, m=s)
+
+
+def _slstm_cell(carry: SLSTMCache, gx, r, b):
+    """One timestep. gx [B,4,H,d] pre-activations from the input."""
+    h, c, n, m = carry
+    rec = jnp.einsum("bhd,hdge->bghe", h.astype(r.dtype), r,
+                     preferred_element_type=jnp.float32)
+    pre = gx + rec + b
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c_new = f * c + i * jnp.tanh(zt)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMCache(h_new, c_new, n_new, m_new), h_new
+
+
+@jax.custom_vjp
+def _slstm_core(gx, r, b_gates, h0, c0, n0, m0):
+    """Time scan over _slstm_cell. gx [S, B, 4, H, d] pre-activations.
+
+    Custom VJP: jax's scan autodiff accumulates the recurrent wgrad dR as a
+    loop carry, which under SPMD inserts an all-reduce PER TIMESTEP (measured
+    3.3 TB/device/step at 1.3B train_4k). This hand-written BPTT saves the
+    per-step gate activations, runs the sequential dh recurrence, and forms
+    dR with ONE einsum over (time x batch) outside the loop — a single
+    deferred reduction. The m-stabilizer is treated as constant, which is
+    EXACT: h is invariant to m (c~, n~ are reparametrizations)."""
+    carry, hs = jax.lax.scan(
+        lambda cr, g: _slstm_cell(cr, g, r, b_gates),
+        SLSTMCache(h0, c0, n0, m0), gx)
+    return hs, carry.h, carry.c, carry.n, carry.m
+
+
+def _slstm_core_fwd(gx, r, b_gates, h0, c0, n0, m0):
+    def step(cr, g):
+        rec = jnp.einsum("bhd,hdge->bghe", cr.h.astype(r.dtype), r,
+                         preferred_element_type=jnp.float32)
+        pre = g + rec + b_gates
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(ft + cr.m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + cr.m - m_new)
+        tz = jnp.tanh(zt)
+        so = jax.nn.sigmoid(ot)
+        c_new = f * cr.c + i * tz
+        n_new = f * cr.n + i
+        h_new = so * c_new / jnp.maximum(n_new, 1e-6)
+        saved = (cr.h, cr.c, cr.n, i, f, tz, so, c_new, n_new)
+        return SLSTMCache(h_new, c_new, n_new, m_new), (h_new, saved)
+
+    carry, (hs, saved) = jax.lax.scan(step, SLSTMCache(h0, c0, n0, m0), gx)
+    return (hs, carry.h, carry.c, carry.n, carry.m), (saved, r)
+
+
+def _slstm_core_bwd(res, cts):
+    saved, r = res
+    d_hs, d_hT, d_cT, d_nT, _d_mT = cts
+    (hprev, cprev, nprev, i, f, tz, so, c, n) = saved
+
+    def back(carry, inp):
+        dh_next, dc_next, dn_next = carry
+        d_h_t, hp, cp, np_, i_t, f_t, tz_t, so_t, c_t, n_t = inp
+        dh = d_h_t + dh_next
+        nn = jnp.maximum(n_t, 1e-6)
+        do_pre = dh * (c_t / nn) * so_t * (1 - so_t)
+        dc = dh * so_t / nn + dc_next
+        dn = -dh * so_t * c_t / (nn * nn) + dn_next
+        dz_pre = dc * i_t * (1 - tz_t * tz_t)
+        di_pre = (dc * tz_t + dn) * i_t
+        df_pre = (dc * cp + dn * np_) * f_t
+        dpre = jnp.stack([di_pre, df_pre, dz_pre, do_pre], axis=1)  # [B,4,H,d]
+        dh_prev = jnp.einsum("bghe,hdge->bhd", dpre.astype(r.dtype), r,
+                             preferred_element_type=jnp.float32)
+        return (dh_prev, dc * f_t, dn * f_t), dpre
+
+    (dh0, dc0, dn0), dpre = jax.lax.scan(
+        back, (d_hT, d_cT, d_nT),
+        (d_hs, hprev, cprev, nprev, i, f, tz, so, c, n),
+        reverse=True)
+    # ONE deferred wgrad reduction instead of one per timestep:
+    dr = jnp.einsum("sbhd,sbghe->hdge", hprev, dpre)
+    db = jnp.sum(dpre, axis=(0, 1))
+    return dpre, dr, db, dh0, dc0, dn0, jnp.zeros_like(dh0)
+
+
+_slstm_core.defvjp(_slstm_core_fwd, _slstm_core_bwd)
+
+
+def slstm_block(cfg, bp, x, cache: Optional[SLSTMCache]):
+    """Sequential sLSTM over the full sequence. x [B, S, D]."""
+    b, s, D = x.shape
+    H, d = sdims(cfg)
+    u = rms_norm(x, bp["norm"], cfg.norm_eps)
+    gx = jnp.einsum("bsd,dghe->bsghe", u.astype(jnp.float32), bp["w_gates"])
+    carry = slstm_cache(cfg, b) if cache is None else cache
+
+    # bf16 recurrent matvec: R is read once per TIMESTEP from HBM — casting
+    # it to the model dtype halves the dominant byte stream (EXPERIMENTS.md
+    # §Perf xlstm iteration 4); accumulation stays fp32.
+    r_cast = bp["r_gates"].astype(jnp.dtype(cfg.dtype))
+    hs, hT, cT, nT, mT = _slstm_core(
+        gx.swapaxes(0, 1), r_cast, bp["b_gates"],
+        carry.h, carry.c, carry.n, carry.m)
+    carry = SLSTMCache(hT, cT, nT, mT)
+    y = hs.swapaxes(0, 1).reshape(b, s, D).astype(x.dtype)
+    y = rms_norm(y, bp["out_norm"], cfg.norm_eps)
+    x = x + jnp.einsum("bsd,de->bse", y, bp["w_out"])
+    # post-block GELU MLP (paper's projection block, factor 2)
+    hmlp = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, bp["w_up"]))
+    return x + jnp.einsum("bsf,fd->bsd", hmlp, bp["w_down"]), carry
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+
+def _group_struct(cfg: ModelConfig):
+    per = cfg.slstm_group
+    assert cfg.num_layers % per == 0, "num_layers must divide slstm_group"
+    return cfg.num_layers // per, per - 1  # (groups, mlstm per group)
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    G, M = _group_struct(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    vp = pad_vocab(cfg.vocab_size)
+    ks = jax.random.split(key, 4)
+
+    def stack(fn, k, n):
+        return jax.vmap(lambda kk: fn(cfg, kk))(jax.random.split(k, n))
+
+    def stack2(fn, k):
+        return jax.vmap(lambda kr: jax.vmap(lambda kk: fn(cfg, kk))(
+            jax.random.split(kr, M)))(jax.random.split(k, G))
+
+    return {
+        "embed": embed_init(ks[0], (vp, cfg.d_model), dt),
+        "mlstm": stack2(mlstm_init, ks[1]),          # [G, M, ...]
+        "slstm": stack(slstm_init, ks[2], G),        # [G, ...]
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[3], (cfg.d_model, vp), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardingCtx) -> dict:
+    vp = pad_vocab(cfg.vocab_size)
+    mspec = mlstm_specs(cfg, ctx)
+    sspec = slstm_specs(cfg, ctx)
+    return {
+        "embed": P(ctx.model_if(vp), ctx.pdata_if(cfg.d_model)),
+        "mlstm": jax.tree.map(lambda s: P(None, None, *s), mspec,
+                              is_leaf=lambda x: isinstance(x, P)),
+        "slstm": jax.tree.map(lambda s: P(None, *s), sspec,
+                              is_leaf=lambda x: isinstance(x, P)),
+        "final_norm": P(None),
+        "lm_head": P(ctx.pdata_if(cfg.d_model), ctx.model_if(vp)),
+    }
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: MLSTMCache    # leaves stacked [G, M, ...]
+    slstm: SLSTMCache    # leaves stacked [G, ...]
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int = 0) -> XLSTMCache:
+    G, M = _group_struct(cfg)
+    mc = mlstm_cache(cfg, batch)
+    sc = slstm_cache(cfg, batch)
+    return XLSTMCache(
+        mlstm=jax.tree.map(lambda x: jnp.broadcast_to(x, (G, M) + x.shape), mc),
+        slstm=jax.tree.map(lambda x: jnp.broadcast_to(x, (G,) + x.shape), sc),
+    )
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int, seq_len: int = 0):
+    mc = mlstm_cache_specs(cfg, ctx, batch)
+    sc = slstm_cache_specs(cfg, ctx, batch)
+    return XLSTMCache(
+        mlstm=jax.tree.map(lambda s: P(None, None, *s), mc,
+                           is_leaf=lambda x: isinstance(x, P)),
+        slstm=jax.tree.map(lambda s: P(None, *s), sc,
+                           is_leaf=lambda x: isinstance(x, P)),
+    )
+
+
+def _x_spec(ctx):
+    """Residual spec for xLSTM: batch over data, sequence REPLICATED.
+
+    Both mixers are scans (chunk scan / time scan); sequence sharding over
+    ``model`` forces an all-gather per chunk reshape and — far worse — turns
+    the sLSTM recurrent wgrad into a per-TIMESTEP all-reduce (measured
+    3.3 TB/device/step at 1.3B train_4k). Activations are small (no d_ff),
+    so replicating the sequence dim costs ~16 MB/layer-save and removes the
+    pathological wire traffic."""
+    if ctx is None:
+        return P()
+    return P(ctx.axes.data, None, None)
+
+
+def _stack_forward(cfg, params, x, ctx, cache: Optional[XLSTMCache], single: bool):
+    """Scan over super-blocks; inner scan over the M mLSTM layers."""
+    s = x.shape[1]
+    chunk = cfg.ssm_chunk or 256
+
+    def super_block(xc, scanned):
+        gp_m, gp_s, cm, cs = scanned
+
+        def inner(xc2, scanned2):
+            lp, cl = scanned2
+            xc2, cl_new = mlstm_block(cfg, lp, xc2, chunk, cl, single=single,
+                                      ctx=ctx)
+            return xc2, cl_new
+
+        xc, cm_new = jax.lax.scan(inner, xc, (gp_m, cm))
+        xc = cst(xc, _x_spec(ctx), ctx)
+        xc, cs_new = slstm_block(cfg, gp_s, xc, cs)
+        return cst(xc, _x_spec(ctx), ctx), (cm_new, cs_new)
+
+    # per-super-block remat: without it the backward saves every mLSTM
+    # chunk input across all L layers (~30 GiB/device at 1.3B train_4k)
+    body_fn = (jax.checkpoint(super_block)
+               if cfg.remat and not single else super_block)
+    if cache is None:
+        b = x.shape[0]
+        cache = init_cache(cfg, b)
+    x, (cm, cs) = jax.lax.scan(
+        body_fn, x, (params["mlstm"], params["slstm"], cache.mlstm, cache.slstm)
+    )
+    return x, XLSTMCache(cm, cs)
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx=None, **_):
+    x = _embed(cfg, params, tokens, None)
+    x = cst(x, _x_spec(ctx), ctx)
+    x, _cache = _stack_forward(cfg, params, x, ctx, None, single=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x, ctx)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, **_):
+    logits = forward(cfg, params, batch["tokens"], ctx)
+    return token_xent(logits[:, :-1], batch["labels"][:, 1:], batch.get("weights"))
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx=None, **_):
+    x = _embed(cfg, params, tokens, None)
+    x = cst(x, _x_spec(ctx), ctx)
+    x, cache = _stack_forward(cfg, params, x, ctx, None, single=False)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x, ctx)[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: XLSTMCache, token, pos, ctx=None):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x.reshape(b, 1, -1)
+    x, cache = _stack_forward(cfg, params, x, ctx, cache, single=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x, ctx)[:, 0], cache

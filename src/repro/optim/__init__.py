@@ -1,0 +1,11 @@
+from repro.optim.transform import GradientTransformation, chain, apply_updates
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedules import exponential_decay, cosine_decay, constant
+
+__all__ = [
+    "GradientTransformation", "chain", "apply_updates",
+    "sgd", "adamw", "clip_by_global_norm",
+    "exponential_decay", "cosine_decay", "constant",
+]

@@ -1,0 +1,57 @@
+"""AdamW (decoupled weight decay), fp32 moments regardless of param dtype."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adamw(
+    learning_rate: Union[float, Callable],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr = lr_fn(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            u = -(lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            upd = jax.tree.map(lambda m, v: _upd(m, v, None), mu, nu)
+        else:
+            upd = jax.tree.map(_upd, mu, nu, params)
+        return upd, AdamWState(step=step, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)

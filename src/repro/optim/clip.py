@@ -1,0 +1,20 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+from repro.utils.tree import tree_l2_norm
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = tree_l2_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)

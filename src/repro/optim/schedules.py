@@ -1,0 +1,28 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def exponential_decay(init_value: float, decay_rate: float):
+    """The paper's descent schedule: eta^(t) = eta^(0) * decay^t (0.1, 0.998)."""
+
+    def schedule(step):
+        return jnp.asarray(init_value, jnp.float32) * jnp.power(
+            jnp.asarray(decay_rate, jnp.float32), step
+        )
+
+    return schedule
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(step):
+        frac = jnp.clip(step / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+
+    return schedule

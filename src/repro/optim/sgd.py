@@ -1,0 +1,45 @@
+"""SGD with optional momentum (the paper's local optimizer is plain SGD)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: object  # pytree or None
+
+
+def sgd(
+    learning_rate: Union[float, Callable],
+    momentum: float = 0.0,
+    nesterov: bool = False,
+) -> GradientTransformation:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        lr = lr_fn(state.step)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+            )
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: -(lr * (momentum * m + g.astype(jnp.float32))), new_mom, grads
+                )
+            else:
+                upd = jax.tree.map(lambda m: -(lr * m), new_mom)
+        else:
+            new_mom = None
+            upd = jax.tree.map(lambda g: -(lr * g.astype(jnp.float32)), grads)
+        return upd, SGDState(step=state.step + 1, momentum=new_mom)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_l2_norm,
+    tree_cast,
+)

@@ -1,0 +1,97 @@
+"""HLO-text collective parser: per-device wire bytes per collective kind.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+partitioned HLO text and sum the *result-shape* bytes of every collective op,
+scaled to ring-algorithm wire cost with the participant count parsed from
+``replica_groups``:
+
+    all-gather         (n-1)/n * out_bytes
+    reduce-scatter     (n-1)   * out_bytes          (= (n-1)/n * in_bytes)
+    all-reduce         2*(n-1)/n * buf_bytes
+    all-to-all         (n-1)/n * buf_bytes
+    collective-permute buf_bytes
+
+Collectives inside ``while`` bodies appear once in the text; the dry-run
+corrects with the L=1/L=2 calibration (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# iota groups: replica_groups=[16,32]<=[512] -> group size = second dim? No:
+# [G,n]<=[N] means G groups of n participants.
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str, reduce_max: bool = False) -> int:
+    sizes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d_ in dims.split(","):
+            if d_:
+                n *= int(d_)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    if not sizes:
+        return 0
+    # async "-start" ops carry (operand, result) tuples: max picks the buffer
+    return max(sizes) if reduce_max else sum(sizes)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown layout: conservative
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind wire bytes (per device) from partitioned HLO text."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result line looks like: %name = TYPE op-name(...), attrs
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES if op == c or op == c + "-start"
+                     or op == c + "-done"), None)
+        if kind is None or op.endswith("-done"):
+            continue
+        n = _group_size(ls)
+        out[kind] += _wire_factor(kind, n) * _shape_bytes(
+            m.group(1), reduce_max=op.endswith("-start"))
+    out["total"] = sum(v for k_, v in out.items() if k_ != "total")
+    return dict(out)

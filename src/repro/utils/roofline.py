@@ -1,0 +1,102 @@
+"""Roofline math for TPU v5e (the deployment target).
+
+Terms are *per-device seconds* for one step:
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / ICI_BW
+
+(dividing per-device quantities by per-chip rates is identical to the
+chips-normalized global formula). MODEL_FLOPS is the analytic useful compute
+(6·N_active·tokens for training, 2·N_active·tokens for single forward), used
+to compute the usefulness ratio MODEL_FLOPS / (HLO_FLOPs · chips).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12   # bf16 per chip
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    flops: float              # per device per step
+    bytes_hbm: float          # per device per step
+    bytes_wire: float         # per device per step
+    chips: int
+    model_flops: float        # analytic useful flops, GLOBAL
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_wire / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound (sum) — we report both bound and max."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_global = self.flops * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-implied step time."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_mfu": self.mfu,
+        }
+
+
+def active_params(cfg, total_params: int) -> float:
+    """Parameters touched per token (MoE: only routed experts are active)."""
+    if cfg.family != "moe":
+        return float(total_params)
+    # expert weights: 3 matrices [E, D, F] per layer
+    expert = 3 * cfg.num_experts * cfg.d_model * cfg.d_ff * cfg.num_layers
+    dense_part = total_params - expert
+    active_expert = expert * cfg.experts_per_token / cfg.num_experts
+    return float(dense_part + active_expert)
+
+
+def model_flops(cfg, shape, total_params: int) -> float:
+    """Analytic useful FLOPs per step (global).
+
+    train: 6·N_active·tokens (fwd+bwd); prefill: 2·N_active·tokens;
+    decode: 2·N_active·batch (one token per request).
+    """
+    n_act = active_params(cfg, total_params)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: 1 new token/request

@@ -1,0 +1,11 @@
+"""Shared pytest fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py forces 512 host devices."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,271 @@
+"""Unit + property tests for the paper's core machinery (eqs. 3-10, Props 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.aircomp import aircomp_aggregate, aircomp_aggregate_tree
+from repro.core.channel import draw_channels, effective_channel
+from repro.core.dro import lambda_ascent, project_simplex
+from repro.core.energy import round_energy, transmit_energy
+from repro.core.poe import ca_afl_pmf, energy_expert_pmf, product_of_experts
+from repro.core.selection import gumbel_topk_mask, select_clients, topk_mask
+
+FLOATS = st.floats(min_value=0.05, max_value=10.0, allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# Channel + energy (eqs. 3-6)
+# ---------------------------------------------------------------------------
+
+
+def test_channel_truncation_and_shape(key):
+    h = draw_channels(key, 100, 64, floor=0.05, flat=True)
+    assert h.shape == (100, 64)
+    assert float(jnp.min(h)) >= 0.05
+    # flat fading: identical across sub-carriers
+    np.testing.assert_allclose(h[:, 0], h[:, 63])
+
+
+def test_channel_frequency_selective(key):
+    h = draw_channels(key, 10, 64, flat=False)
+    assert float(jnp.std(h[0])) > 0  # varies across sub-carriers
+
+
+def test_effective_channel_harmonic_mean():
+    h = jnp.array([[1.0, 1.0], [1.0, 0.5]])
+    eff = effective_channel(h)
+    np.testing.assert_allclose(eff[0], 1.0, rtol=1e-6)
+    # 1/h_eff^2 = mean(1, 4) = 2.5
+    np.testing.assert_allclose(eff[1], 1 / np.sqrt(2.5), rtol=1e-6)
+
+
+def test_energy_formula():
+    # E~ = psi * M * tau / |h|^2  (paper's numbers: M=7850, psi=0.5mW, tau=1ms)
+    e = transmit_energy(jnp.array([1.0]), 7850, 0.5e-3, 1e-3)
+    np.testing.assert_allclose(e, 7850 * 0.5e-6, rtol=1e-6)
+    # round energy only counts the selected set
+    h = jnp.array([1.0, 0.5])
+    mask = jnp.array([1.0, 0.0])
+    np.testing.assert_allclose(
+        round_energy(h, mask, 100, 1.0, 1.0), 100.0, rtol=1e-6)
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 50).map(lambda n: (n,)),
+                  elements=FLOATS))
+@settings(max_examples=50, deadline=None)
+def test_energy_monotone_in_channel(h):
+    """Better channel => lower upload energy (eq. 5 inverse-square)."""
+    e = np.asarray(transmit_energy(jnp.asarray(h), 100, 1e-3, 1e-3))
+    order_h = np.argsort(h)
+    order_e = np.argsort(-e)
+    assert np.array_equal(order_h, order_e) or np.allclose(
+        np.sort(h), h[order_e][::-1])
+
+
+# ---------------------------------------------------------------------------
+# PoE PMF (Prop. 1, eqs. 7-9)
+# ---------------------------------------------------------------------------
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 64).map(lambda n: (n,)),
+                  elements=FLOATS),
+       st.floats(min_value=0.0, max_value=64.0))
+@settings(max_examples=80, deadline=None)
+def test_energy_expert_is_pmf(h, c):
+    y = np.asarray(energy_expert_pmf(jnp.asarray(h), c))
+    assert np.all(y >= 0)
+    np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-4)
+
+
+def test_energy_expert_unbiased_at_c0():
+    """C=0 -> uniform PMF (Prop. 1 'unbiased' extreme)."""
+    h = jnp.array([0.1, 1.0, 5.0])
+    np.testing.assert_allclose(energy_expert_pmf(h, 0.0),
+                               jnp.full(3, 1 / 3), rtol=1e-6)
+
+
+def test_energy_expert_fully_biased_at_large_c():
+    """C->inf -> argmax collapse (Prop. 1 'fully biased' extreme)."""
+    h = jnp.array([0.5, 2.0, 1.0])
+    y = energy_expert_pmf(h, 1000.0)
+    np.testing.assert_allclose(y, jnp.array([0.0, 1.0, 0.0]), atol=1e-6)
+
+
+@given(hnp.arrays(np.float32, (8,), elements=FLOATS),
+       st.floats(min_value=0.1, max_value=16.0))
+@settings(max_examples=50, deadline=None)
+def test_energy_expert_order_preservation(h, c):
+    """Prop. 1 proof property: h_i > h_j => y_i > y_j."""
+    y = np.asarray(energy_expert_pmf(jnp.asarray(h), c))
+    for i in range(len(h)):
+        for j in range(len(h)):
+            if h[i] > h[j] + 1e-4:
+                assert y[i] >= y[j] - 1e-6
+
+
+def test_poe_equals_eq9():
+    """product_of_experts(lambda, y) == rho of eq. (9)."""
+    key = jax.random.PRNGKey(3)
+    lam = jax.nn.softmax(jax.random.normal(key, (16,)))
+    h = jnp.exp(jax.random.normal(jax.random.fold_in(key, 1), (16,)))
+    c = 4.0
+    rho1 = product_of_experts(lam, energy_expert_pmf(h, c))
+    rho2 = ca_afl_pmf(lam, h, c)
+    np.testing.assert_allclose(rho1, rho2, rtol=1e-5)
+
+
+def test_ca_afl_c0_recovers_afl():
+    """C=0: rho == lambda (the algorithm defaults to AFL)."""
+    lam = jnp.array([0.1, 0.2, 0.3, 0.4])
+    h = jnp.array([5.0, 0.1, 2.0, 1.0])
+    np.testing.assert_allclose(ca_afl_pmf(lam, h, 0.0), lam, rtol=1e-5)
+
+
+def test_ca_afl_large_c_recovers_greedy():
+    """Prop. 2: C->inf puts all mass on the best channel."""
+    lam = jnp.array([0.7, 0.1, 0.1, 0.1])
+    h = jnp.array([0.2, 0.4, 3.0, 1.0])
+    rho = ca_afl_pmf(lam, h, 500.0)
+    np.testing.assert_allclose(rho, jnp.array([0, 0, 1.0, 0]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Simplex projection + lambda ascent (Alg. 1 lines 13-15)
+# ---------------------------------------------------------------------------
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 100).map(lambda n: (n,)),
+                  elements=st.floats(-5, 5, allow_nan=False)))
+@settings(max_examples=80, deadline=None)
+def test_project_simplex_valid(v):
+    p = np.asarray(project_simplex(jnp.asarray(v)))
+    assert np.all(p >= -1e-6)
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-4)
+
+
+def test_project_simplex_idempotent_on_simplex():
+    v = jnp.array([0.2, 0.3, 0.5])
+    np.testing.assert_allclose(project_simplex(v), v, atol=1e-6)
+
+
+def test_project_simplex_matches_bruteforce():
+    """Compare against a scipy-free QP-style reference on small inputs."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        v = rng.normal(size=5).astype(np.float32)
+        p = np.asarray(project_simplex(jnp.asarray(v)))
+        # KKT check: p = max(v - theta, 0) with sum p = 1
+        active = p > 1e-7
+        theta = (v[active].sum() - 1) / active.sum()
+        np.testing.assert_allclose(p[active], v[active] - theta, atol=1e-5)
+
+
+def test_lambda_ascent_direction():
+    """Higher-loss clients gain lambda mass (the DRO adversary)."""
+    lam = jnp.full((4,), 0.25)
+    losses = jnp.array([0.1, 0.1, 0.1, 5.0])
+    lam2 = lambda_ascent(lam, losses, jnp.ones(4), gamma=0.1)
+    assert float(lam2[3]) > float(lam2[0])
+    np.testing.assert_allclose(jnp.sum(lam2), 1.0, atol=1e-5)
+
+
+def test_lambda_ascent_respects_mask():
+    lam = jnp.full((4,), 0.25)
+    losses = jnp.array([0.0, 0.0, 0.0, 100.0])
+    lam2 = lambda_ascent(lam, losses, jnp.array([1, 1, 1, 0.0]), gamma=0.1)
+    np.testing.assert_allclose(lam2, lam, atol=1e-6)  # masked-out: no drift
+
+
+# ---------------------------------------------------------------------------
+# Selection strategies
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 9))
+@settings(max_examples=20, deadline=None)
+def test_gumbel_topk_exactly_k(k):
+    key = jax.random.PRNGKey(k)
+    logits = jax.random.normal(key, (10,))
+    mask = gumbel_topk_mask(key, logits, k)
+    assert int(jnp.sum(mask)) == k
+
+
+def test_gumbel_topk_matches_pmf_marginals():
+    """Empirical inclusion frequency follows the PMF ordering."""
+    key = jax.random.PRNGKey(0)
+    logits = jnp.log(jnp.array([0.5, 0.3, 0.15, 0.05]))
+    masks = jax.vmap(lambda k: gumbel_topk_mask(k, logits, 1))(
+        jax.random.split(key, 3000))
+    freq = np.asarray(masks.mean(0))
+    assert freq[0] > freq[1] > freq[2] > freq[3]
+    np.testing.assert_allclose(freq, [0.5, 0.3, 0.15, 0.05], atol=0.04)
+
+
+def test_greedy_is_prop2_limit():
+    """Greedy == CA-AFL at C=inf (Prop. 2), for any lambda > 0."""
+    key = jax.random.PRNGKey(7)
+    lam = jax.nn.softmax(jax.random.normal(key, (20,)))
+    h = jnp.exp(jax.random.normal(jax.random.fold_in(key, 1), (20,)))
+    greedy = select_clients("greedy", key, lam, h, 5)
+    # CA-AFL at enormous C: gumbel noise is dwarfed by C*log h spread
+    ca = select_clients("ca_afl", key, lam, h, 5, C=1e6)
+    np.testing.assert_allclose(greedy, ca)
+
+
+def test_gca_requires_grad_norms():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        select_clients("gca", key, jnp.full(4, .25), jnp.ones(4), 2)
+
+
+def test_gca_variable_count(key):
+    """GCA schedules a VARIABLE number of clients (the paper's critique)."""
+    counts = []
+    for s in range(20):
+        kk = jax.random.fold_in(key, s)
+        h = effective_channel(draw_channels(kk, 100, 64))
+        g = jnp.abs(jax.random.normal(kk, (100,))) + 0.1
+        mask = select_clients("gca", kk, jnp.full(100, 0.01), h, 40,
+                              grad_norms=g)
+        counts.append(int(jnp.sum(mask)))
+    assert len(set(counts)) > 1
+    assert 10 < np.mean(counts) < 70  # ~42 in the paper's setting
+
+
+# ---------------------------------------------------------------------------
+# AirComp aggregation (eq. 10)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 12), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_aircomp_weighted_mean(n, d):
+    key = jax.random.PRNGKey(n * 31 + d)
+    x = jax.random.normal(key, (n, d))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) > 0.5
+            ).astype(jnp.float32)
+    k = jnp.maximum(jnp.sum(mask), 1.0)
+    out = aircomp_aggregate(x, mask, key, noise_std=0.0, k=k)
+    ref = (x * mask[:, None]).sum(0) / k
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_aircomp_noise_statistics(key):
+    """Injected AWGN has the right std (eq. 10's z/K)."""
+    x = jnp.zeros((4, 20000))
+    mask = jnp.ones((4,))
+    out = aircomp_aggregate(x, mask, key, noise_std=2.0, k=4.0)
+    np.testing.assert_allclose(jnp.std(out), 2.0 / 4.0, rtol=0.05)
+
+
+def test_aircomp_tree_matches_flat(key):
+    tree = {"a": jax.random.normal(key, (5, 3)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (5, 2, 2))}}
+    mask = jnp.array([1, 1, 0, 1, 0.0])
+    out = aircomp_aggregate_tree(tree, mask, key, noise_std=0.0)
+    ref_a = (tree["a"] * mask[:, None]).sum(0) / 3
+    np.testing.assert_allclose(out["a"], ref_a, rtol=1e-5)
+    assert out["b"]["c"].shape == (2, 2)

@@ -1,0 +1,141 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py
+oracle, per the assignment (assert_allclose on every combination)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.aircomp.kernel import aircomp_pallas
+from repro.kernels.aircomp.ops import aircomp_aggregate_flat
+from repro.kernels.aircomp.ref import aircomp_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# aircomp
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(4, 128), (100, 7850), (7, 333), (40, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aircomp_sweep(n, m, dtype, key):
+    x = jax.random.normal(key, (n, m), dtype)
+    w = (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) > 0.5
+         ).astype(jnp.float32)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (m,), jnp.float32)
+    out = aircomp_pallas(x, w, z, noise_std=0.3, k=max(float(w.sum()), 1.0),
+                         interpret=True)
+    ref = aircomp_ref(x, w, z, 0.3, max(float(w.sum()), 1.0))
+    np.testing.assert_allclose(out, ref, **TOL[dtype])
+
+
+def test_aircomp_ops_dispatch(key):
+    x = jax.random.normal(key, (10, 500))
+    w = jnp.ones((10,))
+    z = jnp.zeros((500,))
+    a = aircomp_aggregate_flat(x, w, z, noise_std=0.0, k=10.0,
+                               use_pallas=True)
+    b = aircomp_aggregate_flat(x, w, z, noise_std=0.0, k=10.0,
+                               use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,d", [(8, 128), (300, 512), (1024, 896), (5, 6144)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(r, d, dtype, key):
+    x = jax.random.normal(key, (r, d), dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    out = rmsnorm_pallas(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_rmsnorm_ops_nd(key):
+    x = jax.random.normal(key, (2, 7, 384))
+    s = jnp.ones((384,))
+    out = rmsnorm(x, s, use_pallas=True)
+    ref = rmsnorm(x, s, use_pallas=False)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hkv,g,sq,t,d", [
+    (1, 1, 1, 128, 128, 64),     # minimal
+    (2, 2, 3, 128, 128, 64),     # GQA group routing
+    (1, 1, 48, 128, 128, 128),   # granite-like kv=1
+    (2, 4, 2, 256, 256, 128),    # qwen-like
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hkv, g, sq, t, d, dtype, key):
+    q = jax.random.normal(key, (b * hkv * g, sq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b * hkv, t, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b * hkv, t, d), dtype)
+    o = flash_attention_pallas(q, k, v, group=g, causal=True,
+                               tq=64, tk=64, interpret=True)
+    ref = attention_ref(q.reshape(b, hkv * g, sq, d),
+                        k.reshape(b, hkv, t, d),
+                        v.reshape(b, hkv, t, d),
+                        causal=True).reshape(b * hkv * g, sq, d)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_window_sweep(window, key):
+    b, hkv, g, s, d = 1, 2, 2, 128, 64
+    q = jax.random.normal(key, (b * hkv * g, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b * hkv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b * hkv, s, d))
+    o = flash_attention_pallas(q, k, v, group=g, causal=True, window=window,
+                               tq=32, tk=32, interpret=True)
+    ref = attention_ref(q.reshape(b, hkv * g, s, d),
+                        k.reshape(b, hkv, s, d),
+                        v.reshape(b, hkv, s, d),
+                        causal=True, window=window
+                        ).reshape(b * hkv * g, s, d)
+    np.testing.assert_allclose(o, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_noncausal(key):
+    b, hkv, g, s, d = 1, 2, 1, 64, 64
+    q = jax.random.normal(key, (b * hkv * g, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b * hkv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b * hkv, s, d))
+    o = flash_attention_pallas(q, k, v, group=g, causal=False,
+                               tq=32, tk=32, interpret=True)
+    ref = attention_ref(q.reshape(b, hkv * g, s, d),
+                        k.reshape(b, hkv, s, d),
+                        v.reshape(b, hkv, s, d),
+                        causal=False).reshape(b * hkv * g, s, d)
+    np.testing.assert_allclose(o, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_ops_model_layout_matches_chunked_attention(key):
+    """ops.flash_attention (model layout) == models.attention oracle."""
+    from repro.models.attention import attention as model_attn
+    b, s, hkv, g, d = 2, 128, 2, 2, 64
+    q = jax.random.normal(key, (b, s, hkv, g, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    o1 = flash_attention(q, k, v, causal=True, tq=64, tk=64, use_pallas=True)
+    o2 = model_attn(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(o1, o2, rtol=2e-3, atol=2e-3)

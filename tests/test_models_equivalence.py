@@ -1,0 +1,265 @@
+"""Deep model-correctness tests: decode==forward, chunk invariance, rolling
+windows, MoE routing semantics, SSM recurrence equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import dense, encdec, hybrid, moe, ssm, vlm, xlstm
+
+
+def toks(key, cfg, b=2, s=12):
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def test_dense_chunk_invariance(key):
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
+    p = dense.init(cfg, key)
+    t = toks(key, cfg, 2, 16)
+    full = dense.forward(cfg, p, t, chunk=None)
+    for chunk in (4, 8, 16):
+        np.testing.assert_allclose(
+            dense.forward(cfg, p, t, chunk=chunk), full, rtol=2e-4, atol=2e-4)
+
+
+def test_dense_decode_matches_forward(key):
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
+    p = dense.init(cfg, key)
+    b, s = 2, 12
+    t = toks(key, cfg, b, s)
+    full = dense.forward(cfg, p, t, chunk=None)
+    # sequential decode from scratch
+    cache = dense.init_cache(cfg, b, s)
+    outs = []
+    for i in range(s):
+        lg, cache = dense.decode_step(cfg, p, cache, t[:, i],
+                                      jnp.asarray(i, jnp.int32))
+        outs.append(lg)
+    seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(seq, full, rtol=5e-4, atol=5e-4)
+
+
+def test_dense_rolling_cache_matches_windowed_forward(key):
+    cfg = get_reduced("qwen2-0.5b").with_(
+        dtype="float32", window=8, long_context_threshold=8)
+    p = dense.init(cfg, key)
+    b, s = 2, 20
+    t = toks(key, cfg, b, s)
+    ref = dense.forward(cfg, p, t, chunk=None, window=8)
+    cache = dense.init_cache(cfg, b, 1000)  # rolling, len 8
+    assert cache["k"].shape[2] == 8
+    for i in range(s):
+        lg, cache = dense.decode_step(cfg, p, cache, t[:, i],
+                                      jnp.asarray(i, jnp.int32))
+    np.testing.assert_allclose(lg, ref[:, -1], rtol=5e-4, atol=5e-4)
+
+
+def test_dense_qkv_bias_used(key):
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
+    assert cfg.qkv_bias  # qwen2 has QKV bias per the assignment
+    p = dense.init(cfg, key)
+    t = toks(key, cfg)
+    base = dense.forward(cfg, p, t)
+    p["layers"]["bq"] = p["layers"]["bq"] + 1.0
+    assert bool(jnp.any(jnp.abs(dense.forward(cfg, p, t) - base) > 1e-4))
+
+
+def test_vocab_padding_masked(key):
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32", vocab_size=500)
+    p = dense.init(cfg, key)
+    logits = dense.forward(cfg, p, toks(key, cfg))
+    assert logits.shape[-1] == 512  # padded to VOCAB_PAD multiple
+    assert float(jnp.max(logits[..., 500:])) < -1e29  # padded ids masked
+
+
+# ---------------------------------------------------------------------------
+# moe
+# ---------------------------------------------------------------------------
+
+
+def test_moe_capacity_drops_are_bounded(key):
+    """With cf=E/k (no drops possible), forward == decode path exactly."""
+    cfg = get_reduced("qwen3-moe-30b-a3b").with_(
+        dtype="float32", moe_capacity_factor=8.0)
+    p = moe.init(cfg, key)
+    b, s = 2, 16
+    t = toks(key, cfg, b, s)
+    logits, aux = moe.forward(cfg, p, t)
+    assert jnp.isfinite(aux)
+    lgp, c2 = moe.prefill(cfg, p, t[:, :s - 1], chunk=None)
+    cache2 = {k_: jnp.pad(v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+              for k_, v in c2.items()}
+    lg3, _ = moe.decode_step(cfg, p, cache2, t[:, s - 1],
+                             jnp.asarray(s - 1, jnp.int32))
+    np.testing.assert_allclose(lg3, logits[:, -1], rtol=5e-4, atol=5e-4)
+
+
+def test_moe_router_gradient_flows(key):
+    cfg = get_reduced("qwen3-moe-30b-a3b").with_(dtype="float32")
+    p = moe.init(cfg, key)
+    t = toks(key, cfg)
+    g = jax.grad(lambda pp: moe.loss_fn(cfg, pp, {"tokens": t, "labels": t}))(p)
+    rnorm = float(jnp.linalg.norm(g["layers"]["router"]))
+    assert rnorm > 0 and np.isfinite(rnorm)
+
+
+def test_moe_aux_loss_balances(key):
+    """Aux loss attains its minimum value 1 for perfectly uniform routing:
+    aux = E * sum_e(me_e * ce_e) with me = ce = 1/E -> E * E * 1/E^2 = 1."""
+    cfg = get_reduced("qwen3-moe-30b-a3b").with_(dtype="float32")
+    probs = jnp.full((2, 8, cfg.num_experts), 1.0 / cfg.num_experts)
+    me = probs.mean((0, 1))
+    assert np.isclose(float(cfg.num_experts * (me * me).sum()), 1.0)
+
+
+def test_moe_dispatch_indices_exact(key):
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    idx = jnp.array([[0, 1], [1, 2], [0, 3], [1, 1]])  # [S=4, k=2]
+    slots, valid = moe._dispatch_indices(cfg, idx, cap=3)
+    # expert 0 gets assignments {0 (tok0 slot0), 4 (tok2 slot0)}
+    got_e0 = sorted(np.asarray(slots[0])[np.asarray(valid[0])].tolist())
+    assert got_e0 == [0, 4]
+    got_e1 = sorted(np.asarray(slots[1])[np.asarray(valid[1])].tolist())
+    assert got_e1 == [1, 2, 6]  # three assignments, cap 3, none dropped
+
+
+# ---------------------------------------------------------------------------
+# ssm / xlstm / hybrid
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_chunk_invariance_and_decode(key):
+    cfg = get_reduced("zamba2-1.2b").with_(dtype="float32")
+    bp = ssm.block_init(cfg, key)
+    x = jax.random.normal(key, (2, 24, cfg.d_model))
+    y, cache = ssm.block_forward(cfg, bp, x)
+    y2, _ = ssm.block_forward(cfg.with_(ssm_chunk=5), bp, x)
+    np.testing.assert_allclose(y, y2, rtol=1e-4, atol=1e-4)
+    c = ssm.init_block_cache(cfg, 2)
+    outs = []
+    for t in range(24):
+        o, c = ssm.block_step(cfg, bp, x[:, t:t + 1], c)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), y,
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(cache.state, c.state, rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_state_decay(key):
+    """With large dt*|a|, the state forgets the past (selectivity)."""
+    cfg = get_reduced("zamba2-1.2b").with_(dtype="float32")
+    bp = ssm.block_init(cfg, key)
+    bp["A_log"] = jnp.full_like(bp["A_log"], 5.0)   # a = -e^5: fast decay
+    bp["dt_bias"] = jnp.full_like(bp["dt_bias"], 5.0)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    _, cache1 = ssm.block_forward(cfg, bp, x)
+    x2 = x.at[:, 0].set(100.0)  # perturb the distant past
+    _, cache2 = ssm.block_forward(cfg, bp, x2)
+    # state barely remembers position 0
+    rel = float(jnp.linalg.norm(cache1.state - cache2.state)
+                / (jnp.linalg.norm(cache1.state) + 1e-9))
+    assert rel < 0.2
+
+
+def test_xlstm_chunk_invariance_and_decode(key):
+    cfg = get_reduced("xlstm-1.3b").with_(dtype="float32")
+    p = xlstm.init(cfg, key)
+    t = toks(key, cfg, 2, 12)
+    logits = xlstm.forward(cfg, p, t)
+    l2 = xlstm.forward(cfg.with_(ssm_chunk=3), p, t)
+    np.testing.assert_allclose(logits, l2, rtol=2e-4, atol=2e-4)
+    lg, cache = xlstm.prefill(cfg, p, t[:, :11])
+    lg2, _ = xlstm.decode_step(cfg, p, cache, t[:, 11],
+                               jnp.asarray(11, jnp.int32))
+    np.testing.assert_allclose(lg2, logits[:, -1], rtol=5e-4, atol=5e-4)
+
+
+def test_xlstm_no_nan_long_sequence(key):
+    """exp input gates stay finite over 200 steps (stabilization check)."""
+    cfg = get_reduced("xlstm-1.3b").with_(dtype="float32")
+    p = xlstm.init(cfg, key)
+    t = jax.random.randint(key, (1, 200), 0, cfg.vocab_size)
+    logits = xlstm.forward(cfg, p, t)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_hybrid_decode_and_shared_params(key):
+    cfg = get_reduced("zamba2-1.2b").with_(dtype="float32", remat=False)
+    p = hybrid.init(cfg, key)
+    # ONE shared attention block: params have no stacked site axis
+    assert p["shared_attn"]["wq"].ndim == 4
+    t = toks(key, cfg, 2, 12)
+    logits = hybrid.forward(cfg, p, t)
+    lg, cache = hybrid.prefill(cfg, p, t[:, :11], chunk=None)
+    cache = hybrid.HybridCache(
+        mamba=cache.mamba,
+        k=jnp.pad(cache.k, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))),
+        v=jnp.pad(cache.v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))))
+    lg2, _ = hybrid.decode_step(cfg, p, cache, t[:, 11],
+                                jnp.asarray(11, jnp.int32))
+    np.testing.assert_allclose(lg2, logits[:, -1], rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# vlm / encdec
+# ---------------------------------------------------------------------------
+
+
+def test_vlm_gates_zero_init_is_pure_lm(key):
+    cfg = get_reduced("llama-3.2-vision-11b").with_(dtype="float32",
+                                                    remat=False)
+    p = vlm.init(cfg, key)
+    t = toks(key, cfg)
+    img1 = jax.random.normal(key, (2, cfg.num_image_tokens, cfg.d_model))
+    l1 = vlm.forward(cfg, p, t, img1)
+    l2 = vlm.forward(cfg, p, t, img1 * 0)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)  # tanh(0) gates
+
+
+def test_vlm_images_attend_after_gate_open(key):
+    cfg = get_reduced("llama-3.2-vision-11b").with_(dtype="float32",
+                                                    remat=False)
+    p = vlm.init(cfg, key)
+    p["cross_layers"]["gate_attn"] = jnp.full_like(
+        p["cross_layers"]["gate_attn"], 1.0)
+    t = toks(key, cfg)
+    img = jax.random.normal(key, (2, cfg.num_image_tokens, cfg.d_model))
+    assert bool(jnp.any(jnp.abs(
+        vlm.forward(cfg, p, t, img) - vlm.forward(cfg, p, t, img * 0)) > 1e-4))
+
+
+def test_encdec_decode_matches_forward(key):
+    cfg = get_reduced("seamless-m4t-medium").with_(dtype="float32",
+                                                   remat=False)
+    p = encdec.init(cfg, key)
+    b, s = 2, 12
+    t = toks(key, cfg, b, s)
+    audio = jax.random.normal(key, (b, cfg.num_audio_frames, cfg.d_model))
+    logits = encdec.forward(cfg, p, t, audio)
+    lg, cache = encdec.prefill(cfg, p, t[:, :s - 1], audio, chunk=None)
+    cache = encdec.EncDecCache(
+        k=jnp.pad(cache.k, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))),
+        v=jnp.pad(cache.v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))),
+        mk=cache.mk, mv=cache.mv)
+    lg2, _ = encdec.decode_step(cfg, p, cache, t[:, s - 1],
+                                jnp.asarray(s - 1, jnp.int32))
+    np.testing.assert_allclose(lg2, logits[:, -1], rtol=5e-4, atol=5e-4)
+
+
+def test_encdec_encoder_bidirectional(key):
+    """Future audio frames influence early decoder positions (non-causal)."""
+    cfg = get_reduced("seamless-m4t-medium").with_(dtype="float32",
+                                                   remat=False)
+    p = encdec.init(cfg, key)
+    t = toks(key, cfg, 1, 6)
+    audio = jax.random.normal(key, (1, cfg.num_audio_frames, cfg.d_model))
+    l1 = encdec.forward(cfg, p, t, audio)
+    audio2 = audio.at[:, -1].add(10.0)  # perturb the LAST frame
+    l2 = encdec.forward(cfg, p, t, audio2)
+    assert bool(jnp.any(jnp.abs(l2[:, 0] - l1[:, 0]) > 1e-5))

@@ -1,0 +1,95 @@
+"""Paper-scale simulator tests: Algorithm 1 end-to-end on small N/T + the
+paper's qualitative claims at reduced scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.simulator import run_simulation
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+
+@pytest.fixture(scope="module")
+def sim_data():
+    x, y, xt, yt = make_fmnist_like(num_train=2000, num_test=500, dim=64,
+                                    seed=0)
+    xs, ys = sorted_label_shards(x, y, 20)
+    # stacked per-client test shards for worst-client metrics
+    xts, yts = sorted_label_shards(xt, yt, 20)
+    return xs, ys, xts, yts
+
+
+def _fl(method="ca_afl", rounds=30, **kw):
+    return FLConfig(num_clients=20, clients_per_round=8, rounds=rounds,
+                    batch_size=20, method=method, lr0=0.3, lr_decay=0.995,
+                    ascent_lr=2e-2, **kw)
+
+
+MODEL = logistic_regression(dim=64, num_classes=10)
+
+
+def test_simulator_runs_and_learns(sim_data):
+    hist = run_simulation(MODEL, _fl("ca_afl"), sim_data)
+    assert hist.avg_acc.shape == (30,)
+    assert float(hist.avg_acc[-1]) > 0.5          # learns
+    assert float(hist.loss[0]) > float(hist.loss[-1])
+    assert bool(jnp.all(jnp.isfinite(hist.energy)))
+    assert bool(jnp.all(hist.energy[1:] >= hist.energy[:-1]))  # cumulative
+
+
+@pytest.mark.parametrize("method", ["fedavg", "afl", "greedy", "gca"])
+def test_all_baselines_run(sim_data, method):
+    hist = run_simulation(MODEL, _fl(method, rounds=10), sim_data)
+    assert bool(jnp.all(jnp.isfinite(hist.avg_acc)))
+    if method == "gca":
+        counts = np.asarray(hist.num_scheduled)
+        assert counts.std() > 0  # variable scheduled count
+    else:
+        np.testing.assert_allclose(np.asarray(hist.num_scheduled), 8)
+
+
+def test_energy_ordering_greedy_ca_afl_afl(sim_data):
+    """Paper's Fig. 3: greedy <= CA-AFL(C=8) <= AFL in energy."""
+    e = {}
+    for method, c in (("greedy", 0.0), ("ca_afl", 8.0), ("afl", 0.0)):
+        hist = run_simulation(MODEL, _fl(method, energy_C=c), sim_data)
+        e[method] = float(hist.energy[-1])
+    assert e["greedy"] < e["ca_afl"] < e["afl"]
+
+
+def test_ca_afl_c0_statistically_afl(sim_data):
+    """C=0 has the same expected energy as AFL (same sampling law)."""
+    runs = {m: [] for m in ("afl", "c0")}
+    for s in range(3):
+        runs["afl"].append(float(run_simulation(
+            MODEL, _fl("afl"), sim_data, seed=s).energy[-1]))
+        runs["c0"].append(float(run_simulation(
+            MODEL, _fl("ca_afl", energy_C=0.0), sim_data, seed=s).energy[-1]))
+    a, c = np.mean(runs["afl"]), np.mean(runs["c0"])
+    assert abs(a - c) / a < 0.25
+
+
+def test_dro_improves_worst_client(sim_data):
+    """AFL-style methods beat FedAvg on worst-client accuracy (Fig. 2b)."""
+    worst = {}
+    for method in ("fedavg", "afl"):
+        accs = []
+        for s in range(2):
+            h = run_simulation(MODEL, _fl(method, rounds=60), sim_data, seed=s)
+            accs.append(float(jnp.mean(h.worst_acc[-5:])))
+        worst[method] = np.mean(accs)
+    assert worst["afl"] > worst["fedavg"] - 0.02
+
+
+def test_increasing_c_reduces_energy(sim_data):
+    energies = []
+    for c in (0.0, 2.0, 8.0, 32.0):
+        h = run_simulation(MODEL, _fl("ca_afl", energy_C=c), sim_data)
+        energies.append(float(h.energy[-1]))
+    # monotone non-increasing (allow small stochastic wiggle)
+    for lo, hi in zip(energies[1:], energies[:-1]):
+        assert lo < hi * 1.10
+    assert energies[-1] < energies[0] * 0.7
