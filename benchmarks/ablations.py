@@ -1,32 +1,34 @@
-"""Beyond-paper ablations.
+"""Beyond-paper ablations, driven by the batched sweep engine.
 
 1. AirComp receiver-noise robustness: the paper sets z=0 in its experiments
    ("we did not impose any power control mechanism"); here we sweep the
    injected AWGN std of eq. (10) and measure the accuracy degradation —
-   quantifying how much receiver noise CA-AFL tolerates.
+   quantifying how much receiver noise CA-AFL tolerates. The whole noise
+   grid is one ``vmap`` axis: one compilation for all five settings.
 2. Frequency-selective fading: the paper uses flat block fading (one
    coefficient per client per round). With independent per-sub-carrier
    draws, eq. (6)'s harmonic mean concentrates across clients — the
    client-to-client energy spread (the resource CA-AFL exploits) shrinks,
    and with it the achievable savings. This ablation measures that shrink.
+   (flat vs. selective is structural, so this one is 2 methods × 2 fading
+   structures = 4 compilations — still one ``run_sweep`` call.)
 
 `PYTHONPATH=src python -m benchmarks.ablations`
 """
 from __future__ import annotations
 
 import json
-from dataclasses import replace
 from pathlib import Path
 
-import numpy as np
-
 from repro.configs.base import FLConfig
-from repro.core.simulator import run_simulation
+from repro.core.sweep import expand_grid, run_sweep
 from repro.data.synthetic import make_fmnist_like
 from repro.federated.partition import sorted_label_shards
 from repro.models.logreg import logistic_regression
 
 RESULTS = Path(__file__).resolve().parent / "results"
+
+NOISE_GRID = (0.0, 1e-3, 1e-2, 3e-2, 1e-1)
 
 
 def _setup(seed=0):
@@ -41,33 +43,36 @@ def _setup(seed=0):
 
 def noise_robustness():
     model, fl, data = _setup()
+    specs = expand_grid(
+        fl, variants={str(std): {"noise_std": std} for std in NOISE_GRID})
+    summary = run_sweep(model, data, specs, seeds=(0,)).summary(window=10)
     out = {}
-    for std in (0.0, 1e-3, 1e-2, 3e-2, 1e-1):
-        h = run_simulation(model, replace(fl, noise_std=std), data)
-        out[str(std)] = {
-            "avg_acc": float(np.mean(np.asarray(h.avg_acc)[-10:])),
-            "worst_acc": float(np.mean(np.asarray(h.worst_acc)[-10:])),
-        }
-        print(f"  noise_std={std:7.3f}: avg={out[str(std)]['avg_acc']:.3f} "
-              f"worst={out[str(std)]['worst_acc']:.3f}")
+    for std in NOISE_GRID:
+        row = summary[str(std)]
+        out[str(std)] = {"avg_acc": row["avg_acc"],
+                         "worst_acc": row["worst_acc"]}
+        print(f"  noise_std={std:7.3f}: avg={row['avg_acc']:.3f} "
+              f"worst={row['worst_acc']:.3f}")
     return out
 
 
 def frequency_selective():
     model, fl, data = _setup()
+    specs = expand_grid(
+        fl,
+        variants={"afl": {"method": "afl", "energy_C": 0.0},
+                  "ca_afl": {"method": "ca_afl", "energy_C": 8.0}},
+        scenarios=("default", "freq_selective"))
+    summary = run_sweep(model, data, specs, seeds=(0,)).summary(window=10)
     out = {}
     for flat in (True, False):
-        rows = {}
-        for method, c in (("afl", 0.0), ("ca_afl", 8.0)):
-            h = run_simulation(
-                model, replace(fl, method=method, energy_C=c,
-                               flat_fading=flat), data)
-            rows[method] = float(h.energy[-1])
-        out["flat" if flat else "freq_selective"] = {
-            **rows, "saving": 1 - rows["ca_afl"] / rows["afl"]}
-        print(f"  {'flat' if flat else 'freq-selective':15s}: "
+        suffix = "" if flat else "@freq_selective"
+        rows = {m: summary[m + suffix]["energy"] for m in ("afl", "ca_afl")}
+        tag = "flat" if flat else "freq_selective"
+        out[tag] = {**rows, "saving": 1 - rows["ca_afl"] / rows["afl"]}
+        print(f"  {tag:15s}: "
               f"AFL={rows['afl']:.2e} J CA-AFL={rows['ca_afl']:.2e} J "
-              f"saving={out['flat' if flat else 'freq_selective']['saving']:.0%}")
+              f"saving={out[tag]['saving']:.0%}")
     return out
 
 

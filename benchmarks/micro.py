@@ -15,11 +15,10 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.poe import ca_afl_logits
 from repro.core.selection import gumbel_topk_mask
-from repro.utils.roofline import HBM_BW, PEAK_FLOPS
+from repro.utils.roofline import HBM_BW
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

@@ -14,7 +14,7 @@ def main():
     from benchmarks import micro, paper_figs, roofline_table
 
     print("=" * 72)
-    print("BENCH 1/4: paper Figs. 2-3 reproduction (CA-AFL vs baselines)")
+    print("BENCH 1/5: paper Figs. 2-3 reproduction (CA-AFL vs baselines)")
     print("=" * 72)
     checks = paper_figs.main(full=full)
     failed = [k for k, v in checks.items()
@@ -23,20 +23,26 @@ def main():
         print(f"!! claims not reproduced this run: {failed}")
 
     print("=" * 72)
-    print("BENCH 2/4: microbenchmarks (selection scalability, kernel model)")
+    print("BENCH 2/5: microbenchmarks (selection scalability, kernel model)")
     print("=" * 72)
     micro.main()
 
     print("=" * 72)
-    print("BENCH 3/4: roofline table from dry-run artifacts")
+    print("BENCH 3/5: roofline table from dry-run artifacts")
     print("=" * 72)
     roofline_table.main()
 
     print("=" * 72)
-    print("BENCH 4/4: beyond-paper ablations (noise robustness, fading)")
+    print("BENCH 4/5: beyond-paper ablations (noise robustness, fading)")
     print("=" * 72)
     from benchmarks import ablations
     ablations.main()
+
+    print("=" * 72)
+    print("BENCH 5/5: batched sweep-engine smoke (BENCH_sweep.json)")
+    print("=" * 72)
+    from benchmarks import sweep_smoke
+    sweep_smoke.main()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,77 @@
+"""CI benchmark smoke: a tiny sweep through the batched engine.
+
+Runs a 2-method × 3-seed × 2-scenario grid small enough for a CI runner
+(<1 min on 2 CPU cores), records wall time, compile count and the summary
+table, and writes ``benchmarks/results/BENCH_sweep.json`` — the artifact CI
+uploads so the performance trajectory of the sweep engine accrues per-commit.
+
+`PYTHONPATH=src python -m benchmarks.sweep_smoke`
+"""
+from __future__ import annotations
+
+import platform
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import FLConfig
+from repro.core import sweep
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def main():
+    x, y, xt, yt = make_fmnist_like(1200, 300, dim=48, seed=0)
+    xs, ys = sorted_label_shards(x, y, 16)
+    xts, yts = sorted_label_shards(xt, yt, 16)
+    data = (xs, ys, xts, yts)
+    model = logistic_regression(48, 10)
+    fl = FLConfig(num_clients=16, clients_per_round=6, rounds=40,
+                  batch_size=16, lr0=0.3, lr_decay=0.995, ascent_lr=2e-2)
+
+    specs = sweep.expand_grid(
+        fl,
+        variants={"afl": {"method": "afl"},
+                  "ca_afl_c8": {"method": "ca_afl", "energy_C": 8.0}},
+        scenarios=("default", "heterogeneous_pathloss"))
+    seeds = (0, 1, 2)
+
+    sweep.reset_trace_log()
+    t0 = time.perf_counter()
+    result = sweep.run_sweep(model, data, specs, seeds=seeds)
+    jax.block_until_ready([h.avg_acc for h in result.histories])
+    wall_s = time.perf_counter() - t0
+
+    cells = len(specs) * len(seeds)
+    print(f"[sweep_smoke] {len(specs)} configs x {len(seeds)} seeds "
+          f"({cells} cells) in {wall_s:.1f}s, "
+          f"{sweep.trace_count()} compilations")
+    summary = result.summary(window=5)
+    for lbl, row in summary.items():
+        print(f"  {lbl:28s} worst_acc={row['worst_acc']:.3f} "
+              f"E={row['energy']:.2e} J")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    payload = result.save_json(
+        RESULTS / "BENCH_sweep.json", window=5,
+        extra={
+            "bench": "sweep_smoke",
+            "cells": cells,
+            "wall_seconds": wall_s,
+            "compilations": sweep.trace_count(),
+            "cells_per_compilation": cells / max(sweep.trace_count(), 1),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "device": jax.devices()[0].platform,
+        })
+    print(f"[sweep_smoke] wrote {RESULTS / 'BENCH_sweep.json'} "
+          f"(pareto: {payload['pareto_energy_vs_worst_acc']})")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,8 @@ a real forward/train step on CPU.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
 
 
 @dataclass(frozen=True)
@@ -102,6 +102,20 @@ INPUT_SHAPES = {
 }
 
 
+class GCAParams(NamedTuple):
+    """GCA [10] selection knobs. Plain floats in a config; the sweep engine
+    promotes them to traced scalars so a whole GCA hyperparameter grid rides
+    one vmap axis (re-exported from ``repro.core.selection`` for back-compat).
+    """
+
+    lambda_E: float = 0.5
+    lambda_V: float = 0.5
+    rho1: float = 0.5
+    rho2: float = 0.5
+    sigma_t: float = 1.0
+    alpha: float = 1500.0
+
+
 @dataclass(frozen=True)
 class FLConfig:
     """Federated-learning run configuration (paper's Section IV defaults)."""
@@ -122,5 +136,9 @@ class FLConfig:
     psi: float = 0.5e-3             # scaling factor psi = 0.5 mW
     tau: float = 1e-3               # symbol period (LTE, 1 ms)
     noise_std: float = 0.0          # AWGN std on the aggregated signal (eq. 10)
+    # scenario heterogeneity beyond the paper (0 => the paper's i.i.d. setup)
+    shadowing_std: float = 0.0      # log-normal shadowing std per coherence block
+    pathloss_db_spread: float = 0.0  # per-client large-scale gain spread (dB)
     method: str = "ca_afl"          # ca_afl | afl | fedavg | greedy | gca
+    gca: GCAParams = GCAParams()    # GCA hyperparameters (sweepable)
     seed: int = 0

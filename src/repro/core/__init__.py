@@ -1,8 +1,12 @@
 """The paper's primary contribution: channel-aware, energy-efficient,
 distributionally-robust client selection (CA-AFL) + over-the-air aggregation."""
-from repro.core.channel import draw_channels, effective_channel
+from repro.core.channel import (SCENARIOS, ChannelScenario, draw_channels,
+                                draw_channels_scenario, effective_channel,
+                                scenario_from_config)
 from repro.core.energy import transmit_energy, round_energy
 from repro.core.poe import energy_expert_pmf, product_of_experts, ca_afl_pmf
 from repro.core.selection import select_clients, gumbel_topk_mask
 from repro.core.dro import project_simplex, lambda_ascent
 from repro.core.aircomp import aircomp_aggregate, aircomp_aggregate_tree
+from repro.core.sweep import (SweepPoint, SweepResult, expand_grid, run_sweep,
+                              sweep_point_from_config)

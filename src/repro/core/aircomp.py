@@ -17,8 +17,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.utils.tree import tree_size
-
 
 def aircomp_aggregate(
     stacked: jnp.ndarray,
@@ -36,7 +34,9 @@ def aircomp_aggregate(
         k = jnp.sum(mask)
     mshape = (-1,) + (1,) * (stacked.ndim - 1)
     summed = jnp.sum(stacked * mask.reshape(mshape), axis=0)
-    if noise_std:
+    # noise_std may be a traced scalar (sweep engine vmaps it); only skip the
+    # draw when it is a *static* zero — a traced 0.0 adds exactly 0.
+    if not (isinstance(noise_std, (int, float)) and noise_std == 0):
         summed = summed + noise_std * jax.random.normal(key, summed.shape, summed.dtype)
     return summed / k
 

@@ -1,4 +1,4 @@
-"""Wireless channel model (paper §II and §IV-A).
+"""Wireless channel model (paper §II and §IV-A) + parameterized scenarios.
 
 i.i.d. block flat-fading Rayleigh channel h ~ CN(0, 1) per sub-carrier,
 truncated at |h| >= 0.05, coherent for exactly one communication round (the
@@ -6,11 +6,28 @@ paper's most challenging scenario). The effective channel collapses the
 per-sub-carrier channel-inversion powers by the harmonic mean (eq. 6):
 
     1/|h_i|^2 = (1/N_sc) * sum_b 1/|h_{i,b}|^2
+
+``ChannelScenario`` packages the physical-layer knobs as a pytree whose
+*data* fields (truncation floor, receiver noise, psi/tau, shadowing,
+per-client pathloss) are traced scalars/vectors, so a whole family of
+scenarios can ride one ``vmap`` axis of the sweep engine
+(``repro.core.sweep``) under a single compilation. Structural fields that
+change the program itself (``flat``) are pytree *metadata*: scenarios that
+differ in them land in different compilation groups.
+
+With the default scenario, ``draw_channels_scenario`` consumes the PRNG key
+identically to ``draw_channels`` and multiplies by exactly 1.0, so the
+parameterized path reproduces the paper's setup bit-for-bit.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Any
+
 import jax
 import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
 
 
 def draw_channels(
@@ -48,3 +65,102 @@ def effective_channel(h_mag: jnp.ndarray) -> jnp.ndarray:
     """
     inv_sq = jnp.mean(1.0 / jnp.square(h_mag), axis=-1)
     return 1.0 / jnp.sqrt(inv_sq)
+
+
+@dataclass(frozen=True)
+class ChannelScenario:
+    """Physical-layer scenario: traced knobs + structural metadata.
+
+    Data fields accept Python floats or (possibly vmapped) jnp scalars;
+    ``pathloss`` is a scalar or per-client [N] amplitude gain. ``flat`` is
+    pytree metadata (static) because it changes the shape of the random draw.
+    """
+
+    floor: Any = 0.05          # truncation |h| >= floor
+    noise_std: Any = 0.0       # receiver AWGN std of eq. (10)
+    psi: Any = 0.5e-3          # power-scaling factor (eq. 5)
+    tau: Any = 1e-3            # symbol period
+    shadowing_std: Any = 0.0   # log-normal shadowing std per coherence block
+    pathloss: Any = 1.0        # large-scale amplitude gain, scalar or [N]
+    flat: bool = True
+
+
+jax.tree_util.register_dataclass(
+    ChannelScenario,
+    data_fields=["floor", "noise_std", "psi", "tau", "shadowing_std",
+                 "pathloss"],
+    meta_fields=["flat"],
+)
+
+
+def scenario_from_config(fl: FLConfig) -> ChannelScenario:
+    """Build the traced scenario pytree from a (static) ``FLConfig``.
+
+    ``pathloss_db_spread`` > 0 gives clients a deterministic large-scale gain
+    profile spread uniformly (in dB) across ``[-spread/2, +spread/2]`` — the
+    per-client energy heterogeneity the selection methods can exploit.
+    """
+    f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    if fl.pathloss_db_spread:
+        db = jnp.linspace(-fl.pathloss_db_spread / 2, fl.pathloss_db_spread / 2,
+                          fl.num_clients, dtype=jnp.float32)
+        pathloss = 10.0 ** (db / 20.0)
+    else:
+        pathloss = jnp.ones((fl.num_clients,), jnp.float32)
+    return ChannelScenario(
+        floor=f32(fl.channel_floor),
+        noise_std=f32(fl.noise_std),
+        psi=f32(fl.psi),
+        tau=f32(fl.tau),
+        shadowing_std=f32(fl.shadowing_std),
+        pathloss=pathloss,
+        flat=fl.flat_fading,
+    )
+
+
+def draw_channels_scenario(key, scenario: ChannelScenario, num_clients: int,
+                           num_subcarriers: int) -> jnp.ndarray:
+    """Scenario-parameterized channel draw, shape [num_clients, num_subcarriers].
+
+    The Rayleigh small-scale draw consumes ``key`` exactly like
+    ``draw_channels`` (same shapes, same stream); shadowing uses a *folded*
+    key so that `shadowing_std == 0` (and `pathloss == 1`) reproduces the
+    legacy draw exactly — multiplication by exp(0·z)·1.0 is the identity.
+    """
+    draw_sc = 1 if scenario.flat else num_subcarriers
+    re, im = jax.random.normal(key, (2, num_clients, draw_sc)) / jnp.sqrt(2.0)
+    mag = jnp.sqrt(re**2 + im**2)
+    if scenario.flat:
+        mag = jnp.broadcast_to(mag, (num_clients, num_subcarriers))
+    shadow = jnp.exp(
+        scenario.shadowing_std
+        * jax.random.normal(jax.random.fold_in(key, 1), (num_clients, 1))
+    )
+    pathloss = jnp.asarray(scenario.pathloss)
+    if pathloss.ndim == 1:
+        pathloss = pathloss[:, None]
+    return jnp.maximum(mag * shadow * pathloss, scenario.floor)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry: named FLConfig overrides. Adding a scenario is one entry
+# here — the sweep engine (repro.core.sweep.expand_grid) crosses these with
+# method/hyperparameter variants, and any number of entries that share the
+# same structural fields (e.g. flat_fading) share one compilation.
+# ---------------------------------------------------------------------------
+
+SCENARIOS: dict[str, dict] = {
+    # the paper's §IV-A setup: flat block Rayleigh fading, clean receiver
+    "default": {},
+    # independent per-sub-carrier fading (eq. 6 harmonic mean concentrates)
+    "freq_selective": {"flat_fading": False},
+    # receiver AWGN on the aggregated signal (eq. 10 z-term)
+    "noisy_uplink": {"noise_std": 1e-2},
+    # log-normal shadowing on top of fast fading, redrawn per coherence block
+    "deep_shadowing": {"shadowing_std": 0.5},
+    # deterministic 12 dB spread of large-scale gains across clients
+    "heterogeneous_pathloss": {"pathloss_db_spread": 12.0},
+    # harsher truncation: the worst channels are clipped up, shrinking the
+    # client-to-client energy spread CA-AFL exploits
+    "high_floor": {"channel_floor": 0.2},
+}

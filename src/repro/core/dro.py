@@ -8,7 +8,6 @@ on K uniformly sampled clients, then projects back onto the simplex:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -15,21 +15,15 @@ clients per round (the "unpredictability" the paper criticizes).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import GCAParams
 from repro.core.poe import ca_afl_logits
 
-
-class GCAParams(NamedTuple):
-    lambda_E: float = 0.5
-    lambda_V: float = 0.5
-    rho1: float = 0.5
-    rho2: float = 0.5
-    sigma_t: float = 1.0
-    alpha: float = 1500.0
+__all__ = ["GCAParams", "gumbel_topk_mask", "topk_mask", "select_clients"]
 
 
 def gumbel_topk_mask(key, logits: jnp.ndarray, k: int) -> jnp.ndarray:

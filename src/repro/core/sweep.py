@@ -1,0 +1,326 @@
+"""Batched scenario-sweep engine: one jit for a whole (seeds × scenarios ×
+hyperparameter) grid.
+
+The paper's claims are averages over seeds and comparisons across selection
+methods and channel conditions. Running that grid through
+``run_simulation`` costs one compilation *per cell*; this engine instead
+partitions the grid by its *structural* signature (anything that changes the
+traced program: N, K, T, batch size, sub-carriers, flat-vs-selective fading
+and the selection method) and runs each group as
+
+    jit( vmap_points( vmap_seeds( lax.scan(round_fn) ) ) )
+
+so every scalar knob — learning rates, ``energy_C``, GCA hyperparameters,
+channel floor/noise/shadowing/pathloss — rides a ``vmap`` axis of a single
+compiled executable. A five-seed × {FedAvg, AFL, GCA, CA-AFL(C=2), CA-AFL
+(C=8)} comparison compiles 4 executables instead of 25.
+
+Usage::
+
+    specs  = expand_grid(base_fl, variants={"afl": {"method": "afl"},
+                                            "c8": {"method": "ca_afl",
+                                                   "energy_C": 8.0}},
+                         scenarios=("default", "noisy_uplink"))
+    result = run_sweep(model, data, specs, seeds=(0, 1, 2, 3, 4))
+    result.summary()          # per-label mean/std/worst-case across seeds
+    result.pareto_front()     # energy-vs-robustness Pareto extraction
+
+Compilations are observable via ``trace_count()`` (a Python side effect at
+trace time), which the test suite uses to pin "one compile per method".
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, GCAParams
+from repro.core.channel import SCENARIOS, scenario_from_config
+from repro.core.simulator import (SimHistory, init_sim_state,
+                                  make_param_round_fn)
+from repro.utils.tree import tree_size
+
+__all__ = [
+    "SweepPoint", "SweepResult", "sweep_point_from_config", "expand_grid",
+    "run_sweep", "trace_count", "reset_trace_log", "pareto_indices",
+]
+
+
+# ---------------------------------------------------------------------------
+# Sweep points: the traced per-cell knobs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    """All per-cell knobs the round function consumes as traced values.
+
+    ``method`` is pytree metadata (it selects Python branches); the scenario's
+    own ``flat`` flag is metadata inside the nested ``ChannelScenario``.
+    Points whose metadata differ cannot share a vmap axis — ``run_sweep``
+    groups them into separate compilations.
+    """
+
+    scenario: Any              # ChannelScenario (data: traced; meta: flat)
+    lr0: Any = 0.1
+    lr_decay: Any = 0.998
+    ascent_lr: Any = 8e-3
+    energy_C: Any = 8.0
+    gca: Any = GCAParams()     # NamedTuple of (possibly traced) scalars
+    method: str = "ca_afl"
+
+
+jax.tree_util.register_dataclass(
+    SweepPoint,
+    data_fields=["scenario", "lr0", "lr_decay", "ascent_lr", "energy_C", "gca"],
+    meta_fields=["method"],
+)
+
+
+def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
+    """Promote an ``FLConfig``'s scalar knobs to f32 arrays (vmap-stackable)."""
+    f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    return SweepPoint(
+        scenario=scenario_from_config(fl),
+        lr0=f32(fl.lr0),
+        lr_decay=f32(fl.lr_decay),
+        ascent_lr=f32(fl.ascent_lr),
+        energy_C=f32(fl.energy_C),
+        gca=GCAParams(*(f32(v) for v in fl.gca)),
+        method=fl.method,
+    )
+
+
+# Structural FLConfig fields: changing any of these changes the traced
+# program, so specs are grouped by this signature (one compile per group).
+STATIC_FIELDS: Tuple[str, ...] = (
+    "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
+    "num_subcarriers", "flat_fading", "method",
+)
+
+
+def _static_signature(fl: FLConfig) -> Tuple:
+    return tuple(getattr(fl, f) for f in STATIC_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion: variants × named scenarios -> labelled FLConfigs
+# ---------------------------------------------------------------------------
+
+
+def expand_grid(
+    base: FLConfig,
+    variants: Optional[Mapping[str, Mapping[str, Any]]] = None,
+    scenarios: Sequence[Any] = ("default",),
+) -> list[Tuple[str, FLConfig]]:
+    """Cross method/hyperparameter ``variants`` with channel ``scenarios``.
+
+    ``variants`` maps label -> FLConfig field overrides; ``scenarios`` entries
+    are names from :data:`repro.core.channel.SCENARIOS`, raw override dicts
+    (labelled by their contents, e.g. ``noise_std=0.01``), or explicit
+    ``(name, overrides)`` pairs. Returns ``[(label, config), ...]`` ready for
+    :func:`run_sweep`.
+    """
+    variants = dict(variants or {"base": {}})
+    specs = []
+    for sc in scenarios:
+        if isinstance(sc, str):
+            sc_name, sc_kw = sc, SCENARIOS[sc]
+        elif isinstance(sc, tuple):
+            sc_name, sc_kw = sc[0], dict(sc[1])
+        else:
+            sc_kw = dict(sc)
+            sc_name = ",".join(f"{k}={v:g}" if isinstance(v, float) else
+                               f"{k}={v}" for k, v in sc_kw.items()) or "default"
+        # only the true baseline (no overrides) drops the @suffix — an explicit
+        # ("default", {...}) pair with overrides keeps its label distinct
+        baseline = sc_name == "default" and not sc_kw
+        for vlabel, vkw in variants.items():
+            label = vlabel if baseline else f"{vlabel}@{sc_name}"
+            specs.append((label, replace(base, **{**sc_kw, **vkw})))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Compilation accounting (used by tests and the CI benchmark smoke)
+# ---------------------------------------------------------------------------
+
+_TRACE_LOG: list[str] = []
+
+
+def trace_count() -> int:
+    """Number of sweep-executable compilations since the last reset."""
+    return len(_TRACE_LOG)
+
+
+def reset_trace_log() -> None:
+    _TRACE_LOG.clear()
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _stack_points(points: Sequence[SweepPoint]) -> SweepPoint:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *points)
+
+
+def _build_runner(model, fl_static: FLConfig, data, method: str,
+                  noise_free: bool, model_size: int):
+    """One jitted executable: (stacked points [S], seeds [R]) -> SimHistory
+    with leading [S, R] axes on every leaf."""
+    round_fn = make_param_round_fn(model, fl_static, data, model_size, method,
+                                   noise_free=noise_free)
+
+    def run_one(point, seed):
+        state = init_sim_state(model, fl_static, jax.random.PRNGKey(seed))
+        _, hist = jax.lax.scan(
+            lambda s, t: round_fn(point, s, t), state,
+            jnp.arange(fl_static.rounds))
+        return hist
+
+    def batched(points, seeds):
+        # Python side effect: runs once per *compilation* (trace), never on
+        # cached executions — this is the compile counter the tests assert on.
+        _TRACE_LOG.append(method)
+        over_seeds = jax.vmap(run_one, in_axes=(None, 0))
+        return jax.vmap(over_seeds, in_axes=(0, None))(points, seeds)
+
+    return jax.jit(batched)
+
+
+def run_sweep(
+    model,
+    data,
+    specs: Sequence[Tuple[str, FLConfig]],
+    seeds: Sequence[int] = (0,),
+) -> "SweepResult":
+    """Run every (spec × seed) cell; one compilation per structural group.
+
+    ``specs`` is ``[(label, FLConfig), ...]`` (see :func:`expand_grid`).
+    Returns a :class:`SweepResult` whose per-label histories have a leading
+    seed axis [R] on every leaf.
+    """
+    labels = [lbl for lbl, _ in specs]
+    if len(set(labels)) != len(labels):
+        raise ValueError(f"duplicate sweep labels: {labels}")
+    seeds_arr = jnp.asarray(tuple(seeds), jnp.int32)
+
+    groups: dict[Tuple, list[int]] = {}
+    for i, (_, fl) in enumerate(specs):
+        groups.setdefault(_static_signature(fl), []).append(i)
+
+    model_size = tree_size(model.init(jax.random.PRNGKey(0)))
+    histories: list[Optional[SimHistory]] = [None] * len(specs)
+    for idxs in groups.values():
+        fl0 = specs[idxs[0]][1]
+        points = _stack_points(
+            [sweep_point_from_config(specs[i][1]) for i in idxs])
+        # elide the eq.-(10) noise draw only if the whole group is noise-free
+        noise_free = all(specs[i][1].noise_std == 0 for i in idxs)
+        runner = _build_runner(model, fl0, data, fl0.method, noise_free,
+                               model_size)
+        hist = runner(points, seeds_arr)  # leaves [S_group, R, T, ...]
+        for s, i in enumerate(idxs):
+            histories[i] = jax.tree.map(lambda x: x[s], hist)
+
+    return SweepResult(
+        labels=labels,
+        configs=[fl for _, fl in specs],
+        seeds=tuple(int(s) for s in seeds),
+        histories=histories,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Aggregation: seed statistics + energy/robustness Pareto extraction
+# ---------------------------------------------------------------------------
+
+
+def pareto_indices(costs: np.ndarray, utilities: np.ndarray) -> list[int]:
+    """Indices on the (minimize cost, maximize utility) Pareto frontier."""
+    keep = []
+    for i in range(len(costs)):
+        dominated = np.any(
+            (costs <= costs[i]) & (utilities >= utilities[i])
+            & ((costs < costs[i]) | (utilities > utilities[i])))
+        if not dominated:
+            keep.append(i)
+    return sorted(keep, key=lambda i: costs[i])
+
+
+@dataclass
+class SweepResult:
+    """Sweep output: per-label seed-batched histories + aggregation helpers."""
+
+    labels: list[str]
+    configs: list[FLConfig]
+    seeds: Tuple[int, ...]
+    histories: list[SimHistory]  # leaves [R, T, ...] per label
+
+    def __post_init__(self):
+        self._by_label = {lbl: i for i, lbl in enumerate(self.labels)}
+
+    def history(self, label: str) -> SimHistory:
+        """Per-seed history for one label (leaves [R, T, ...])."""
+        return self.histories[self._by_label[label]]
+
+    def mean_history(self, label: str) -> SimHistory:
+        """Seed-averaged history (leaves [T, ...]); == old run_multi_seed."""
+        return jax.tree.map(lambda x: x.mean(0), self.history(label))
+
+    def summary(self, window: int = 10) -> dict:
+        """Per-label statistics over the final ``window`` rounds.
+
+        mean/std across seeds for avg/worst accuracy, the worst-case (min
+        over seeds) worst-client accuracy, and final cumulative energy.
+        """
+        out = {}
+        for lbl in self.labels:
+            h = self.history(lbl)
+            avg = np.asarray(h.avg_acc)[:, -window:].mean(1)     # [R]
+            worst = np.asarray(h.worst_acc)[:, -window:].mean(1)  # [R]
+            std = np.asarray(h.std_acc)[:, -window:].mean(1)     # [R]
+            energy = np.asarray(h.energy)[:, -1]                 # [R]
+            sched = np.asarray(h.num_scheduled)[:, -window:].mean(1)  # [R]
+            out[lbl] = {
+                "avg_acc": float(avg.mean()),
+                "avg_acc_std": float(avg.std()),
+                "worst_acc": float(worst.mean()),
+                "worst_acc_std": float(worst.std()),
+                "worst_case_acc": float(worst.min()),
+                "client_std": float(std.mean()),
+                "energy": float(energy.mean()),
+                "energy_std": float(energy.std()),
+                "num_scheduled": float(sched.mean()),
+            }
+        return out
+
+    def pareto_front(self, window: int = 10, cost: str = "energy",
+                     utility: str = "worst_acc") -> list[str]:
+        """Labels on the energy-vs-robustness Pareto frontier."""
+        s = self.summary(window)
+        costs = np.array([s[lbl][cost] for lbl in self.labels])
+        utils = np.array([s[lbl][utility] for lbl in self.labels])
+        return [self.labels[i] for i in pareto_indices(costs, utils)]
+
+    def to_dict(self, window: int = 10) -> dict:
+        return {
+            "labels": self.labels,
+            "seeds": list(self.seeds),
+            "summary": self.summary(window),
+            "pareto_energy_vs_worst_acc": self.pareto_front(window),
+        }
+
+    def save_json(self, path, window: int = 10, extra: Optional[dict] = None):
+        payload = self.to_dict(window)
+        if extra:
+            payload.update(extra)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        return payload

@@ -8,9 +8,7 @@ reduction GSPMD inserts *is* the over-the-air aggregation (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 

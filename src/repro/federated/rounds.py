@@ -19,7 +19,7 @@ in ``server.py`` — O(N) scalars, exactly the paper's control-channel split.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -13,10 +13,10 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.channel import draw_channels, effective_channel
+from repro.core.channel import (draw_channels_scenario, effective_channel,
+                                scenario_from_config)
 from repro.core.dro import lambda_ascent
 from repro.core.energy import round_energy
 from repro.core.selection import gumbel_topk_mask, select_clients
@@ -48,6 +48,10 @@ class ParameterServer:
         if jit_round:
             self.round_fn = jax.jit(self.round_fn)
         self.optimizer = optimizer
+        # Same parameterized physical layer as the simulator/sweep tier, so
+        # scenario knobs (shadowing, per-client pathloss, floor) behave
+        # identically across tiers.
+        self.scenario = scenario_from_config(fl)
 
     def init_state(self, key) -> ServerState:
         params = self.model.init(key)
@@ -68,11 +72,11 @@ class ParameterServer:
         k_chan, k_sel, k_noise, k_asc = jax.random.split(self._next_key(), 4)
 
         # --- physical layer + selection (host-side, control channel) -------
-        h = effective_channel(draw_channels(
-            k_chan, fl.num_clients, fl.num_subcarriers, fl.channel_floor,
-            flat=fl.flat_fading))
+        h = effective_channel(draw_channels_scenario(
+            k_chan, self.scenario, fl.num_clients, fl.num_subcarriers))
         mask = select_clients(fl.method, k_sel, state.lam, h,
-                              fl.clients_per_round, C=fl.energy_C)
+                              fl.clients_per_round, C=fl.energy_C,
+                              gca=fl.gca)
 
         # --- compiled round on the mesh ------------------------------------
         params, opt_state, metrics = self.round_fn(

@@ -20,7 +20,6 @@ For each pair this driver:
 Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -31,10 +30,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, SHAPE_SKIPS, get_config, get_shape, INPUT_SHAPES
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.federated.rounds import make_fl_round
 from repro.launch.mesh import make_production_mesh
-from repro.models.api import Model, build_model, make_decode_step, make_prefill
+from repro.models.api import build_model, make_decode_step, make_prefill
 from repro.models.specs import ShardingCtx
 from repro.optim import sgd
 from repro.utils.hlo_cost import analyze_hlo

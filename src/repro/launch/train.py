@@ -23,9 +23,7 @@ from repro.configs import get_config, get_reduced
 from repro.configs.base import FLConfig
 from repro.data.synthetic import make_lm_tokens
 from repro.federated.server import ParameterServer
-from repro.launch.mesh import make_host_mesh
 from repro.models.api import build_model
-from repro.models.specs import ShardingCtx
 from repro.optim import sgd, adamw
 
 

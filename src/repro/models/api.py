@@ -19,11 +19,11 @@ allocation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import dense, encdec, hybrid, moe, vlm, xlstm

@@ -13,7 +13,7 @@ sub-quadratic at 524k positions.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import dense, ssm
 from repro.models.dense import cst, _seq_spec, token_xent
-from repro.models.layers import dense_init, embed_init, rms_norm, swiglu
+from repro.models.layers import dense_init, embed_init, rms_norm
 from repro.models.specs import ShardingCtx, pad_vocab
 
 

@@ -23,7 +23,7 @@ from repro.configs.base import ModelConfig
 from repro.models import dense
 from repro.models.dense import cst, _seq_spec
 from repro.models.layers import dense_init, rms_norm
-from repro.models.specs import ShardingCtx, pad_vocab
+from repro.models.specs import ShardingCtx
 
 def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
     c = (tokens_per_group * cfg.experts_per_token * cfg.moe_capacity_factor

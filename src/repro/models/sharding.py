@@ -12,7 +12,7 @@ these helpers, so pjit in/out shardings are derived mechanically.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 from jax.sharding import PartitionSpec as P
 

@@ -13,9 +13,6 @@ at train_4k; GSPMD inserts the all-gather/reduce-scatter pair per layer.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
-
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import MeshAxes

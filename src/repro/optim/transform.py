@@ -1,7 +1,7 @@
 """Minimal optax-style gradient-transformation API (built from scratch)."""
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 

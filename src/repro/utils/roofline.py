@@ -14,7 +14,7 @@ to compute the usefulness ratio MODEL_FLOPS / (HLO_FLOPs · chips).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip

@@ -1,0 +1,70 @@
+"""Minimal, deterministic stand-in for the `hypothesis` API this repo uses.
+
+The real `hypothesis` is pinned in ``pyproject.toml`` and is what CI installs;
+this shim only exists so the suite still *runs* (rather than failing
+collection) in hermetic environments where `hypothesis` cannot be installed.
+``tests/conftest.py`` puts ``tests/_stubs`` on ``sys.path`` only when the real
+package is missing, so the genuine article always wins when present.
+
+Implemented surface (exactly what the tests use):
+  - ``@given(*strategies)`` / ``@settings(max_examples=, deadline=)``
+  - ``strategies.floats / integers / lists`` and ``Strategy.map``
+  - ``hypothesis.extra.numpy.arrays(dtype, shape, elements=...)``
+
+Examples are drawn from a ``numpy`` Generator seeded from the test name, so
+runs are reproducible and shrinking (which the shim does not do) is not needed
+for triage — re-running reproduces the same failing example.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from . import strategies
+from .strategies import Strategy
+
+__all__ = ["given", "settings", "strategies", "Strategy"]
+
+_SETTINGS_ATTR = "_stub_hypothesis_settings"
+
+
+def settings(max_examples: int = 25, deadline=None, **_ignored):
+    """Record example-count settings on the test function (decorator)."""
+
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, {"max_examples": max_examples})
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: Strategy):
+    """Run the test once per generated example (no shrinking, fixed seed)."""
+
+    def deco(fn):
+        def runner():
+            # resolved at call time so both decorator orders work: @settings
+            # below @given stamps `fn`; @settings above @given stamps `runner`
+            cfg = getattr(runner, _SETTINGS_ATTR,
+                          getattr(fn, _SETTINGS_ATTR, {"max_examples": 25}))
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for example in range(cfg["max_examples"]):
+                args = [s.draw(rng) for s in arg_strategies]
+                try:
+                    fn(*args)
+                except Exception as err:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {example} "
+                        f"with args {args!r}"
+                    ) from err
+
+        # NOTE: no functools.wraps — pytest follows __wrapped__ when
+        # inspecting signatures and would demand fixtures named after the
+        # strategy parameters.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco

@@ -1,0 +1,1 @@
+from . import numpy  # noqa: F401

@@ -1,0 +1,18 @@
+"""`hypothesis.extra.numpy.arrays` for the shim (see package docstring)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..strategies import Strategy
+
+
+def arrays(dtype, shape, *, elements: Strategy) -> Strategy:
+    """Array strategy: `shape` is a tuple or a Strategy producing one."""
+
+    def draw(rng):
+        shp = shape.draw(rng) if isinstance(shape, Strategy) else tuple(shape)
+        n = int(np.prod(shp)) if shp else 1
+        flat = np.array([elements.draw(rng) for _ in range(n)], dtype=dtype)
+        return flat.reshape(shp)
+
+    return Strategy(draw)

@@ -1,0 +1,47 @@
+"""Strategy objects for the `hypothesis` shim (see package docstring)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+
+class Strategy:
+    """A draw rule: ``draw(rng) -> value``. Supports ``.map`` like hypothesis."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], object]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn: Callable) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, **_ignored) -> Strategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        # Mix in the endpoints occasionally — hypothesis probes boundaries.
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return float(rng.uniform(lo, hi))
+
+    return Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return Strategy(draw)

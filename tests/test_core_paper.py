@@ -11,7 +11,7 @@ from repro.core.channel import draw_channels, effective_channel
 from repro.core.dro import lambda_ascent, project_simplex
 from repro.core.energy import round_energy, transmit_energy
 from repro.core.poe import ca_afl_pmf, energy_expert_pmf, product_of_experts
-from repro.core.selection import gumbel_topk_mask, select_clients, topk_mask
+from repro.core.selection import gumbel_topk_mask, select_clients
 
 FLOATS = st.floats(min_value=0.05, max_value=10.0, allow_nan=False)
 

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import MeshAxes
 from repro.models.specs import ShardingCtx, pad_vocab
@@ -213,6 +213,7 @@ print("SHARDED_OK")
 """
 
 
+@pytest.mark.slow
 def test_sharded_round_matches_unsharded():
     """The 4x2-mesh FL round reproduces the single-device round exactly —
     proves the sharding (specs + constraints) does not change semantics."""

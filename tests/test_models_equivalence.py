@@ -28,6 +28,7 @@ def test_dense_chunk_invariance(key):
             dense.forward(cfg, p, t, chunk=chunk), full, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_dense_decode_matches_forward(key):
     cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
     p = dense.init(cfg, key)
@@ -45,6 +46,7 @@ def test_dense_decode_matches_forward(key):
     np.testing.assert_allclose(seq, full, rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_dense_rolling_cache_matches_windowed_forward(key):
     cfg = get_reduced("qwen2-0.5b").with_(
         dtype="float32", window=8, long_context_threshold=8)
@@ -167,6 +169,7 @@ def test_ssd_state_decay(key):
     assert rel < 0.2
 
 
+@pytest.mark.slow
 def test_xlstm_chunk_invariance_and_decode(key):
     cfg = get_reduced("xlstm-1.3b").with_(dtype="float32")
     p = xlstm.init(cfg, key)

@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, get_reduced
-from repro.models.api import build_model, make_decode_step, make_prefill
+from repro.configs import get_reduced
+from repro.models.api import build_model, make_decode_step
 
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-30b-a3b",

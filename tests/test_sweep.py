@@ -1,0 +1,255 @@
+"""Sweep-engine tests: numerical equivalence with the single-run simulator,
+compile-count guarantees (one trace per selection method), scenario
+parameterization, and the SweepResult aggregation layer."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, GCAParams
+from repro.core import sweep
+from repro.core.channel import (SCENARIOS, ChannelScenario, draw_channels,
+                                draw_channels_scenario, scenario_from_config)
+from repro.core.simulator import run_multi_seed, run_simulation
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+N, DIM = 12, 32
+MODEL = logistic_regression(dim=DIM, num_classes=10)
+
+
+@pytest.fixture(scope="module")
+def sweep_data():
+    x, y, xt, yt = make_fmnist_like(num_train=600, num_test=240, dim=DIM,
+                                    seed=0)
+    xs, ys = sorted_label_shards(x, y, N)
+    xts, yts = sorted_label_shards(xt, yt, N)
+    return xs, ys, xts, yts
+
+
+def _fl(method="ca_afl", rounds=8, **kw):
+    return FLConfig(num_clients=N, clients_per_round=5, rounds=rounds,
+                    batch_size=16, method=method, lr0=0.3, lr_decay=0.995,
+                    ascent_lr=2e-2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Channel scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_default_scenario_draw_matches_legacy(key):
+    """With the paper's defaults the scenario path is the legacy draw,
+    bit-for-bit (same key consumption, identity gain)."""
+    for flat in (True, False):
+        legacy = draw_channels(key, N, 16, floor=0.05, flat=flat)
+        scen = scenario_from_config(_fl(flat_fading=flat))
+        np.testing.assert_array_equal(
+            draw_channels_scenario(key, scen, N, 16), legacy)
+
+
+def test_scenario_pathloss_and_shadowing_take_effect(key):
+    scen = scenario_from_config(_fl(pathloss_db_spread=12.0))
+    h = draw_channels_scenario(key, scen, N, 16)
+    base = draw_channels_scenario(key, scenario_from_config(_fl()), N, 16)
+    # 12 dB spread: first client attenuated, last amplified vs. homogeneous
+    assert float(h[0].mean()) < float(base[0].mean())
+    assert float(h[-1].mean()) > float(base[-1].mean())
+
+    shadowed = draw_channels_scenario(
+        key, scenario_from_config(_fl(shadowing_std=0.8)), N, 16)
+    assert not np.allclose(shadowed, base)
+
+
+def test_scenario_is_vmappable_pytree():
+    """Data fields stack along a vmap axis; `flat` stays static metadata."""
+    scens = [scenario_from_config(_fl(channel_floor=f)) for f in (0.05, 0.2)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *scens)
+    assert stacked.floor.shape == (2,)
+    assert stacked.pathloss.shape == (2, N)
+    assert stacked.flat is True  # metadata, not stacked
+
+    batched = jax.vmap(
+        lambda s: draw_channels_scenario(jax.random.PRNGKey(0), s, N, 16))
+    h = batched(stacked)
+    assert h.shape == (2, N, 16)
+    assert float(h[1].min()) >= 0.2 - 1e-6
+
+
+def test_scenario_registry_entries_are_valid_configs():
+    for name, overrides in SCENARIOS.items():
+        fl = replace(_fl(), **overrides)
+        scen = scenario_from_config(fl)
+        assert isinstance(scen, ChannelScenario), name
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence with run_simulation / run_multi_seed
+# ---------------------------------------------------------------------------
+
+
+def test_one_point_sweep_matches_run_simulation(sweep_data):
+    fl = _fl("ca_afl")
+    ref = run_simulation(MODEL, fl, sweep_data, seed=3)
+    res = sweep.run_sweep(MODEL, sweep_data, [("pt", fl)], seeds=(3,))
+    got = jax.tree.map(lambda x: x[0], res.history("pt"))
+    for name in ref._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_five_seed_two_method_sweep_matches_and_compiles_once_per_method(
+        sweep_data):
+    """The acceptance criterion: a 5-seed × 2-method sweep reproduces
+    per-config `run_simulation` numerically with exactly one compilation per
+    selection method (the two CA-AFL C-values share one)."""
+    seeds = (0, 1, 2, 3, 4)
+    specs = [("fedavg", _fl("fedavg")),
+             ("ca_afl_c2", _fl("ca_afl", energy_C=2.0)),
+             ("ca_afl_c8", _fl("ca_afl", energy_C=8.0))]
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=seeds)
+    assert sweep.trace_count() == 2  # methods: {fedavg, ca_afl}
+
+    for label, fl in specs:
+        hist = res.history(label)
+        assert hist.avg_acc.shape == (len(seeds), fl.rounds)
+        for si, s in enumerate(seeds):
+            ref = run_simulation(MODEL, fl, sweep_data, seed=s)
+            np.testing.assert_allclose(
+                np.asarray(hist.energy)[si], np.asarray(ref.energy),
+                rtol=1e-5, err_msg=f"{label} seed {s}")
+            np.testing.assert_allclose(
+                np.asarray(hist.avg_acc)[si], np.asarray(ref.avg_acc),
+                atol=1e-6, err_msg=f"{label} seed {s}")
+
+
+def test_run_multi_seed_matches_explicit_average(sweep_data):
+    """run_multi_seed (now one jit via the sweep engine) equals the old
+    per-seed loop average."""
+    fl = _fl("afl", rounds=6)
+    seeds = (0, 1, 2)
+    got = run_multi_seed(MODEL, fl, sweep_data, seeds)
+    runs = [run_simulation(MODEL, fl, sweep_data, seed=s) for s in seeds]
+    ref = jax.tree.map(lambda *xs: jnp.stack(xs).mean(0), *runs)
+    assert got.avg_acc.shape == (fl.rounds,)
+    np.testing.assert_allclose(np.asarray(got.avg_acc),
+                               np.asarray(ref.avg_acc), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.energy),
+                               np.asarray(ref.energy), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.lam),
+                               np.asarray(ref.lam), atol=1e-6)
+
+
+def test_gca_params_ride_the_sweep_axis(sweep_data):
+    """A GCA hyperparameter grid shares one compilation and actually changes
+    behaviour (scheduled counts differ across thresholds)."""
+    specs = [("loose", _fl("gca", gca=GCAParams(rho1=0.2, rho2=0.2))),
+             ("tight", _fl("gca", gca=GCAParams(rho1=0.8, rho2=0.8)))]
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0,))
+    assert sweep.trace_count() == 1
+    loose = float(np.asarray(res.history("loose").num_scheduled).mean())
+    tight = float(np.asarray(res.history("tight").num_scheduled).mean())
+    assert loose > tight  # lower threshold schedules more clients
+
+
+def test_scenarios_change_outcomes_in_sweep(sweep_data):
+    """Scenario knobs are live inside the jitted sweep: a 12 dB pathloss
+    spread changes the energy ledger under uniform (fedavg) selection."""
+    specs = sweep.expand_grid(
+        _fl("fedavg"), variants={"fedavg": {}},
+        scenarios=("default", "heterogeneous_pathloss"))
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0,))
+    e_def = res.summary(3)["fedavg"]["energy"]
+    e_het = res.summary(3)["fedavg@heterogeneous_pathloss"]["energy"]
+    assert e_def > 0 and e_het > 0 and not np.isclose(e_def, e_het)
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion + aggregation layer
+# ---------------------------------------------------------------------------
+
+
+def test_expand_grid_labels_and_overrides():
+    specs = sweep.expand_grid(
+        _fl(), variants={"afl": {"method": "afl"}},
+        scenarios=("default", "noisy_uplink"))
+    labels = [lbl for lbl, _ in specs]
+    assert labels == ["afl", "afl@noisy_uplink"]
+    by = dict(specs)
+    assert by["afl"].method == "afl" and by["afl"].noise_std == 0.0
+    assert by["afl@noisy_uplink"].noise_std == pytest.approx(1e-2)
+
+
+def test_expand_grid_dict_scenarios_get_distinct_labels():
+    """Raw override dicts are labelled by contents; (name, dict) pairs by
+    name — so two ad-hoc scenarios never collide."""
+    specs = sweep.expand_grid(
+        _fl(), scenarios=({"noise_std": 1e-3}, {"noise_std": 1e-2},
+                          ("quiet", {"noise_std": 0.0})))
+    labels = [lbl for lbl, _ in specs]
+    assert labels == ["base@noise_std=0.001", "base@noise_std=0.01",
+                      "base@quiet"]
+    assert len(set(labels)) == 3
+
+
+def test_mixed_noise_group_matches_single_runs(sweep_data):
+    """A compilation group mixing noise-free and noisy points keeps the
+    traced noise path; the statically-elided path (all-zero group) and the
+    traced path agree with run_simulation either way."""
+    specs = [("clean", _fl("afl", rounds=5)),
+             ("noisy", _fl("afl", rounds=5, noise_std=3e-2))]
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0,))
+    assert sweep.trace_count() == 1
+    for label, fl in specs:
+        ref = run_simulation(MODEL, fl, sweep_data, seed=0)
+        np.testing.assert_allclose(
+            np.asarray(res.history(label).avg_acc)[0],
+            np.asarray(ref.avg_acc), atol=1e-6, err_msg=label)
+
+
+def test_run_sweep_rejects_duplicate_labels(sweep_data):
+    with pytest.raises(ValueError):
+        sweep.run_sweep(MODEL, sweep_data,
+                        [("a", _fl()), ("a", _fl())], seeds=(0,))
+
+
+def test_pareto_indices():
+    costs = np.array([1.0, 2.0, 3.0, 0.5])
+    utils = np.array([0.5, 0.9, 0.8, 0.1])
+    # idx 2 dominated by idx 1 (more cost, less utility); rest on the front
+    assert sweep.pareto_indices(costs, utils) == [3, 0, 1]
+
+
+def test_summary_and_pareto_shapes(sweep_data):
+    specs = [("afl", _fl("afl", rounds=6)),
+             ("greedy", _fl("greedy", rounds=6))]
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0, 1))
+    s = res.summary(window=3)
+    assert set(s) == {"afl", "greedy"}
+    for row in s.values():
+        assert row["energy"] > 0
+        assert 0.0 <= row["worst_case_acc"] <= row["avg_acc"] <= 1.0
+        assert row["num_scheduled"] == pytest.approx(5.0)
+    front = res.pareto_front(window=3)
+    assert front and set(front) <= {"afl", "greedy"}
+    # greedy picks the best channels: it must be the cheaper of the two
+    assert s["greedy"]["energy"] < s["afl"]["energy"]
+
+
+def test_save_json_roundtrip(sweep_data, tmp_path):
+    res = sweep.run_sweep(MODEL, sweep_data, [("afl", _fl("afl", rounds=4))],
+                          seeds=(0,))
+    payload = res.save_json(tmp_path / "out.json", window=2,
+                            extra={"bench": "t"})
+    import json
+    on_disk = json.loads((tmp_path / "out.json").read_text())
+    assert on_disk == payload
+    assert on_disk["bench"] == "t"
+    assert on_disk["labels"] == ["afl"]
