@@ -37,7 +37,10 @@ def main():
         fl,
         variants={"afl": {"method": "afl"},
                   "ca_afl_c8": {"method": "ca_afl", "energy_C": 8.0}},
-        scenarios=("default", "heterogeneous_pathloss"))
+        # battery_constrained exercises the temporal ChannelProcess path
+        # (core/dynamics.py): one extra compilation group per method, and the
+        # BENCH_sweep.json artifact gains live min_battery/avail_count columns
+        scenarios=("default", "heterogeneous_pathloss", "battery_constrained"))
     seeds = (0, 1, 2)
 
     sweep.reset_trace_log()

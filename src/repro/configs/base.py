@@ -139,6 +139,18 @@ class FLConfig:
     # scenario heterogeneity beyond the paper (0 => the paper's i.i.d. setup)
     shadowing_std: float = 0.0      # log-normal shadowing std per coherence block
     pathloss_db_spread: float = 0.0  # per-client large-scale gain spread (dB)
+    # temporal scenario dynamics (repro.core.dynamics). `temporal` is
+    # STRUCTURAL: it switches the simulator/server onto the stateful
+    # ChannelProcess path and joins the sweep compilation-group signature;
+    # everything below it is a traced (sweepable) knob of that path. All
+    # defaults keep the paper's i.i.d. per-round block-fading setup.
+    temporal: bool = False          # enable the ChannelProcess carry
+    rho_fading: float = 0.0         # Gauss-Markov (Jakes) fast-fading correlation
+    rho_shadow: float = 0.0         # AR(1) coefficient of the shadowing walk
+    shadow_walk_std: float = 0.0    # per-round innovation std of the log-shadow walk
+    p_dropout: float = 0.0          # P(available -> unavailable) per round
+    p_return: float = 1.0           # P(unavailable -> available) per round
+    battery_init: float = float("inf")  # per-client battery budget (Joules)
     method: str = "ca_afl"          # ca_afl | afl | fedavg | greedy | gca
     gca: GCAParams = GCAParams()    # GCA hyperparameters (sweepable)
     seed: int = 0

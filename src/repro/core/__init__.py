@@ -3,6 +3,10 @@ distributionally-robust client selection (CA-AFL) + over-the-air aggregation."""
 from repro.core.channel import (SCENARIOS, ChannelScenario, draw_channels,
                                 draw_channels_scenario, effective_channel,
                                 scenario_from_config)
+from repro.core.dynamics import (ChannelProcess, ChanState, commit_process,
+                                 evolve_availability, evolve_fading,
+                                 init_chan_state, process_from_config,
+                                 step_process)
 from repro.core.energy import transmit_energy, round_energy
 from repro.core.poe import energy_expert_pmf, product_of_experts, ca_afl_pmf
 from repro.core.selection import select_clients, gumbel_topk_mask

@@ -118,28 +118,43 @@ def scenario_from_config(fl: FLConfig) -> ChannelScenario:
     )
 
 
+def compose_channel(mag: jnp.ndarray, key, scenario: ChannelScenario,
+                    num_clients: int, walk_gain=None) -> jnp.ndarray:
+    """Large-scale composition: mag × i.i.d. shadow × pathloss, floor-clipped.
+
+    THE single definition of the scenario's large-scale effects, shared by
+    the static draw below and by ``dynamics.evolve_fading`` (whose shadowing
+    random walk rides in as ``walk_gain``) — so the static and temporal
+    paths cannot drift apart. The per-round i.i.d. shadow uses fold-in
+    stream 1 of ``key``; `shadowing_std == 0` (and `pathloss == 1`,
+    `walk_gain == 1`) multiplies by exactly 1.0, the identity.
+    """
+    shadow = jnp.exp(
+        scenario.shadowing_std
+        * jax.random.normal(jax.random.fold_in(key, 1), (num_clients, 1))
+    )
+    if walk_gain is not None:
+        shadow = shadow * walk_gain
+    pathloss = jnp.asarray(scenario.pathloss)
+    if pathloss.ndim == 1:
+        pathloss = pathloss[:, None]
+    return jnp.maximum(mag * shadow * pathloss, scenario.floor)
+
+
 def draw_channels_scenario(key, scenario: ChannelScenario, num_clients: int,
                            num_subcarriers: int) -> jnp.ndarray:
     """Scenario-parameterized channel draw, shape [num_clients, num_subcarriers].
 
     The Rayleigh small-scale draw consumes ``key`` exactly like
-    ``draw_channels`` (same shapes, same stream); shadowing uses a *folded*
-    key so that `shadowing_std == 0` (and `pathloss == 1`) reproduces the
-    legacy draw exactly — multiplication by exp(0·z)·1.0 is the identity.
+    ``draw_channels`` (same shapes, same stream); see ``compose_channel``
+    for the large-scale key/identity discipline.
     """
     draw_sc = 1 if scenario.flat else num_subcarriers
     re, im = jax.random.normal(key, (2, num_clients, draw_sc)) / jnp.sqrt(2.0)
     mag = jnp.sqrt(re**2 + im**2)
     if scenario.flat:
         mag = jnp.broadcast_to(mag, (num_clients, num_subcarriers))
-    shadow = jnp.exp(
-        scenario.shadowing_std
-        * jax.random.normal(jax.random.fold_in(key, 1), (num_clients, 1))
-    )
-    pathloss = jnp.asarray(scenario.pathloss)
-    if pathloss.ndim == 1:
-        pathloss = pathloss[:, None]
-    return jnp.maximum(mag * shadow * pathloss, scenario.floor)
+    return compose_channel(mag, key, scenario, num_clients)
 
 
 # ---------------------------------------------------------------------------
@@ -163,4 +178,17 @@ SCENARIOS: dict[str, dict] = {
     # harsher truncation: the worst channels are clipped up, shrinking the
     # client-to-client energy spread CA-AFL exploits
     "high_floor": {"channel_floor": 0.2},
+    # ---- temporal scenarios (repro.core.dynamics ChannelProcess) ----------
+    # Gauss-Markov correlated block fading: a client's channel (hence its
+    # upload energy) persists across rounds, so greedy/CA-AFL selection keeps
+    # hitting the same lucky clients — the starvation regime AFL's λ fights
+    "markov_fading": {"temporal": True, "rho_fading": 0.9},
+    # commuters: strongly correlated fading + a slow shadowing walk (moving
+    # through the cell) + clients leaving/rejoining coverage
+    "commuter_mobility": {"temporal": True, "rho_fading": 0.85,
+                          "rho_shadow": 0.98, "shadow_walk_std": 0.08,
+                          "p_dropout": 0.08, "p_return": 0.3},
+    # finite per-client battery budgets (Sun et al.-style): uploads deplete
+    # eqs. (3-6) energy; exhausted clients drop out of the schedulable pool
+    "battery_constrained": {"temporal": True, "battery_init": 0.01},
 }

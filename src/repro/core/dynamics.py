@@ -1,0 +1,193 @@
+"""Temporal scenario dynamics: the ``ChannelProcess`` layer.
+
+PR 1's :class:`~repro.core.channel.ChannelScenario` parameterizes a *static*
+physical layer — every round redraws the channel i.i.d. (the paper's §IV-A
+block-fading). This module turns that draw into a stateful temporal process,
+the regime of Sun et al. (battery-constrained dynamic scheduling) and Yang et
+al. (device selection under realistic fading):
+
+  - **Gauss-Markov fading** — the complex small-scale coefficients evolve as
+    ``g_t = ρ·g_{t-1} + sqrt(1-ρ²)·ε_t`` (Jakes-style first-order model; the
+    correlation coefficient ``rho_fading`` is a traced, sweepable knob). At
+    ρ=0 the update is exactly the i.i.d. redraw.
+  - **Shadowing random walk** — a slow AR(1) walk in the log domain on top of
+    (and independent from) the scenario's per-round i.i.d. shadowing.
+  - **Availability** — a per-client two-state Markov chain
+    (available ⇄ unavailable, rates ``p_dropout`` / ``p_return``). An
+    unavailable client cannot be scheduled by ANY selection method and does
+    not participate in the ascent set.
+  - **Battery budgets** — each client starts with ``battery_init`` Joules;
+    every upload depletes it by the eqs. (3-6) transmit energy, and a client
+    that cannot afford this round's upload is excluded from selection (so
+    batteries never go negative).
+
+Carry / compilation contract
+----------------------------
+``ChannelProcess`` is a pytree whose *data* fields are traced scalars (they
+ride a ``vmap`` axis of the sweep engine like every other knob) and whose
+single *structural* field ``temporal`` is pytree metadata. ``temporal`` is
+part of the sweep compilation-group signature (``sweep.STATIC_FIELDS``):
+
+  - ``temporal=False`` compiles to exactly today's stateless program — the
+    scan carry gains only an empty ``chan_state = ()`` leaf-less slot, and
+    the per-round key consumption is untouched, so default scenarios are
+    bit-for-bit identical to PR 1.
+  - ``temporal=True`` carries a :class:`ChanState` through the scan. Any
+    number of dynamic scenarios (Markov fading, mobility, battery, or all
+    knobs zeroed into a degenerate i.i.d. process) share ONE compilation per
+    selection method, and the degenerate process reproduces the static
+    trajectories bit-for-bit (pinned by ``tests/test_dynamics.py``).
+
+Key discipline: all process draws derive from ``fold_in``s of the round's
+``k_chan`` (streams 1/2/3), so the static path's streams are never perturbed.
+Future scenarios must extend :class:`ChanState` (a new carry leaf), keep
+their knobs as data fields, and reserve new ``fold_in`` streams — never
+re-split a key the static path consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.channel import compose_channel, effective_channel
+from repro.core.energy import transmit_energy
+
+
+@dataclass(frozen=True)
+class ChannelProcess:
+    """Temporal-process knobs: traced data + the structural ``temporal`` flag."""
+
+    rho_fading: Any = 0.0       # Gauss-Markov correlation of fast fading
+    rho_shadow: Any = 0.0       # AR(1) coefficient of the log-shadow walk
+    shadow_walk_std: Any = 0.0  # per-round innovation std of the walk
+    p_dropout: Any = 0.0        # P(available -> unavailable) per round
+    p_return: Any = 1.0         # P(unavailable -> available) per round
+    battery_init: Any = jnp.inf  # per-client budget (Joules); inf = unlimited
+    temporal: bool = False
+
+
+jax.tree_util.register_dataclass(
+    ChannelProcess,
+    data_fields=["rho_fading", "rho_shadow", "shadow_walk_std", "p_dropout",
+                 "p_return", "battery_init"],
+    meta_fields=["temporal"],
+)
+
+
+class ChanState(NamedTuple):
+    """Per-round carry of the temporal process (the ``chan_state`` leaf)."""
+
+    fast: jnp.ndarray        # [2, N, draw_sc] complex fading state (re, im)
+    log_shadow: jnp.ndarray  # [N] shadowing-walk state (log domain)
+    avail: jnp.ndarray       # [N] 0/1 availability
+    battery: jnp.ndarray     # [N] remaining Joules
+
+
+def process_from_config(fl: FLConfig) -> ChannelProcess:
+    """Promote the ``FLConfig`` process knobs to f32 traced scalars."""
+    f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    return ChannelProcess(
+        rho_fading=f32(fl.rho_fading),
+        rho_shadow=f32(fl.rho_shadow),
+        shadow_walk_std=f32(fl.shadow_walk_std),
+        p_dropout=f32(fl.p_dropout),
+        p_return=f32(fl.p_return),
+        battery_init=f32(fl.battery_init),
+        temporal=fl.temporal,
+    )
+
+
+def init_chan_state(process: ChannelProcess, key, num_clients: int,
+                    num_subcarriers: int, flat: bool) -> ChanState:
+    """Stationary initial state: fading at its CN(0,1) stationary law, the
+    shadow walk at its log-domain mean, everyone available, batteries full."""
+    draw_sc = 1 if flat else num_subcarriers
+    fast = jax.random.normal(key, (2, num_clients, draw_sc)) / jnp.sqrt(2.0)
+    return ChanState(
+        fast=fast,
+        log_shadow=jnp.zeros((num_clients,), jnp.float32),
+        avail=jnp.ones((num_clients,), jnp.float32),
+        battery=jnp.broadcast_to(
+            jnp.asarray(process.battery_init, jnp.float32), (num_clients,)),
+    )
+
+
+def evolve_fading(key, scenario, process: ChannelProcess, state: ChanState,
+                  num_clients: int, num_subcarriers: int):
+    """One Gauss-Markov step; returns (h_mag [N, N_sc], fast', log_shadow').
+
+    Consumes ``key`` exactly like ``channel.draw_channels_scenario`` (the
+    innovation draw uses ``key`` itself, per-round i.i.d. shadowing uses
+    stream 1) and adds the walk innovation on stream 2 — so the degenerate
+    process (ρ=0, walk std 0) reproduces the static draw bit-for-bit.
+    """
+    flat = scenario.flat
+    draw_sc = 1 if flat else num_subcarriers
+    eps = jax.random.normal(key, (2, num_clients, draw_sc)) / jnp.sqrt(2.0)
+    rho = process.rho_fading
+    fast = rho * state.fast + jnp.sqrt(jnp.clip(1.0 - jnp.square(rho), 0.0)) * eps
+    mag = jnp.sqrt(fast[0] ** 2 + fast[1] ** 2)
+    if flat:
+        mag = jnp.broadcast_to(mag, (num_clients, num_subcarriers))
+    log_shadow = (
+        process.rho_shadow * state.log_shadow
+        + process.shadow_walk_std
+        * jax.random.normal(jax.random.fold_in(key, 2), (num_clients,))
+    )
+    h_mag = compose_channel(mag, key, scenario, num_clients,
+                            walk_gain=jnp.exp(log_shadow)[:, None])
+    return h_mag, fast, log_shadow
+
+
+def evolve_availability(key, process: ChannelProcess,
+                        avail: jnp.ndarray) -> jnp.ndarray:
+    """One step of the per-client availability Markov chain (0/1 mask [N])."""
+    u = jax.random.uniform(key, avail.shape)
+    stays = (u >= process.p_dropout).astype(jnp.float32)
+    returns = (u < process.p_return).astype(jnp.float32)
+    return jnp.where(avail > 0, stays, returns)
+
+
+class ProcessStep(NamedTuple):
+    """One pre-selection tick of the temporal process (both tiers use this)."""
+
+    h: jnp.ndarray         # [N] effective channel (eq. 6)
+    e_need: jnp.ndarray    # [N] eqs. (3-6) upload cost at this channel
+    avail: jnp.ndarray     # [N] availability after the Markov step
+    eligible: jnp.ndarray  # [N] avail ∧ can-afford: the schedulable pool
+    fast: jnp.ndarray      # fading state to carry forward
+    log_shadow: jnp.ndarray
+
+
+def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
+                 num_clients: int, num_subcarriers: int,
+                 model_size: int) -> ProcessStep:
+    """Evolve fading + availability and price this round's uploads.
+
+    The SINGLE implementation of the per-round process tick — the simulator's
+    scan body and ``ParameterServer.step`` both call it, so the two tiers
+    cannot drift in key streams or gating order. Selection happens between
+    this and :func:`commit_process` (which depletes the transmitters'
+    batteries into the next carry).
+    """
+    h_mag, fast, log_shadow = evolve_fading(
+        k_chan, scenario, process, state, num_clients, num_subcarriers)
+    h = effective_channel(h_mag)
+    avail = evolve_availability(jax.random.fold_in(k_chan, 3), process,
+                                state.avail)
+    e_need = transmit_energy(h, model_size, scenario.psi, scenario.tau)
+    eligible = avail * (state.battery >= e_need).astype(jnp.float32)
+    return ProcessStep(h=h, e_need=e_need, avail=avail, eligible=eligible,
+                       fast=fast, log_shadow=log_shadow)
+
+
+def commit_process(step: ProcessStep, state: ChanState,
+                   mask: jnp.ndarray) -> ChanState:
+    """Post-selection: deplete the transmitting clients' batteries."""
+    return ChanState(fast=step.fast, log_shadow=step.log_shadow,
+                     avail=step.avail,
+                     battery=state.battery - mask * step.e_need)

@@ -5,7 +5,15 @@ indicating the participating set D^(t). Exactly-K strategies (FedAvg, AFL,
 CA-AFL, greedy) sample K clients *without replacement*; sampling from a PMF
 w/o replacement is done with Gumbel-top-K, which realizes precisely the
 sequential renormalized scheme analysed in the paper's Prop. 2
-(Plackett-Luce).
+(Plackett-Luce). Masks are built from ``jax.lax.top_k`` indices, so exactly
+K clients are selected even when scores tie (quantized/floor-clipped
+channels, -inf-masked logits); a threshold comparison would over-select.
+
+``avail`` (temporal scenarios, ``repro.core.dynamics``): clients whose
+availability entry is 0 get -inf logits (or are dropped from the greedy/GCA
+indicator) and the returned mask is additionally multiplied by ``avail``, so
+an unavailable client is never scheduled by ANY method — even when fewer
+than K clients remain available.
 
 GCA [10] is reimplemented faithfully-in-spirit from its description in the
 paper (exact indicator algebra of [10] is not reproduced in the provided
@@ -23,20 +31,31 @@ import jax.numpy as jnp
 from repro.configs.base import GCAParams
 from repro.core.poe import ca_afl_logits
 
-__all__ = ["GCAParams", "gumbel_topk_mask", "topk_mask", "select_clients"]
+__all__ = ["GCAParams", "availability_logits", "gumbel_topk_mask",
+           "topk_mask", "select_clients"]
+
+
+def _exact_k_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """0/1 mask of the top-k scores — exactly k ones, ties broken by index."""
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros(scores.shape, jnp.float32).at[idx].set(1.0)
+
+
+def availability_logits(avail: Optional[jnp.ndarray]) -> jnp.ndarray | float:
+    """Additive logit mask: 0 where available, -inf where not (0.0 if None)."""
+    if avail is None:
+        return 0.0
+    return jnp.where(avail > 0, 0.0, -jnp.inf)
 
 
 def gumbel_topk_mask(key, logits: jnp.ndarray, k: int) -> jnp.ndarray:
     """Sample k items w/o replacement from softmax(logits); return 0/1 mask [N]."""
     g = jax.random.gumbel(key, logits.shape)
-    scores = logits + g
-    thresh = jnp.sort(scores)[-k]
-    return (scores >= thresh).astype(jnp.float32)
+    return _exact_k_mask(logits + g, k)
 
 
 def topk_mask(values: jnp.ndarray, k: int) -> jnp.ndarray:
-    thresh = jnp.sort(values)[-k]
-    return (values >= thresh).astype(jnp.float32)
+    return _exact_k_mask(values, k)
 
 
 def select_clients(
@@ -48,19 +67,31 @@ def select_clients(
     C: float = 0.0,
     grad_norms: Optional[jnp.ndarray] = None,
     gca: GCAParams = GCAParams(),
+    avail: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Return participation mask [N] for the descent step."""
+    """Return participation mask [N] for the descent step.
+
+    ``avail`` is an optional 0/1 availability mask (temporal scenarios);
+    masked-out clients are never selected. When fewer than ``k`` clients are
+    available, exact-K methods schedule only the available ones.
+    """
     n = lam.shape[0]
+    a_logits = availability_logits(avail)
+
+    def gate(mask):
+        return mask if avail is None else mask * avail
+
     if method == "fedavg":
-        logits = jnp.zeros((n,))
-        return gumbel_topk_mask(key, logits, k)
+        return gate(gumbel_topk_mask(key, jnp.zeros((n,)) + a_logits, k))
     if method == "afl":
-        return gumbel_topk_mask(key, jnp.log(jnp.clip(lam, 1e-38)), k)
+        return gate(gumbel_topk_mask(
+            key, jnp.log(jnp.clip(lam, 1e-38)) + a_logits, k))
     if method == "ca_afl":
-        return gumbel_topk_mask(key, ca_afl_logits(lam, h_eff, C), k)
+        return gate(gumbel_topk_mask(
+            key, ca_afl_logits(lam, h_eff, C) + a_logits, k))
     if method == "greedy":
         # Prop. 2 limit: top-K lowest-energy == top-K best effective channel.
-        return topk_mask(h_eff, k)
+        return gate(topk_mask(h_eff + a_logits, k))
     if method == "gca":
         if grad_norms is None:
             raise ValueError("GCA requires per-client gradient norms")
@@ -84,10 +115,12 @@ def select_clients(
         # the paper's settings (rho1=rho2=0.5, sigma_t=1, alpha=1500) this
         # schedules ~42 of 100 clients on average while the exact count
         # varies per round (the "unpredictability" the paper criticizes).
+        # The threshold statistics stay population-wide (GCA [10] has no
+        # availability notion); unavailable clients are excluded post-hoc.
         thr = (
             gca.rho1 * jnp.mean(indicator)
             + gca.rho2 * jnp.median(indicator)
             + gca.sigma_t / gca.alpha
         )
-        return (indicator > thr).astype(jnp.float32)
+        return gate((indicator > thr).astype(jnp.float32))
     raise ValueError(f"unknown selection method {method!r}")

@@ -26,7 +26,7 @@ Faithfulness notes:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +35,11 @@ from repro.configs.base import FLConfig
 from repro.core.aircomp import aircomp_aggregate_tree
 from repro.core.channel import draw_channels_scenario, effective_channel
 from repro.core.dro import lambda_ascent
+from repro.core.dynamics import (commit_process, init_chan_state,
+                                 process_from_config, step_process)
 from repro.core.energy import round_energy
-from repro.core.selection import gumbel_topk_mask, select_clients
+from repro.core.selection import (availability_logits, gumbel_topk_mask,
+                                  select_clients)
 from repro.models.logreg import SimModel
 from repro.utils.tree import tree_size
 
@@ -46,6 +49,10 @@ class SimState(NamedTuple):
     lam: jnp.ndarray   # [N] simplex weights
     energy: jnp.ndarray  # cumulative Joules
     key: jnp.ndarray
+    # ChanState for temporal scenarios (core/dynamics.py); the empty tuple
+    # for static scenarios — a leaf-less slot, so the i.i.d. program (and the
+    # scan carry XLA sees) is exactly PR 1's.
+    chan_state: Any = ()
 
 
 class SimHistory(NamedTuple):
@@ -56,6 +63,8 @@ class SimHistory(NamedTuple):
     loss: jnp.ndarray       # [T] mean train loss of selected set
     num_scheduled: jnp.ndarray  # [T]
     lam: jnp.ndarray        # [T, N]
+    avail_count: jnp.ndarray  # [T] schedulable clients (avail ∧ battery-ok)
+    min_battery: jnp.ndarray  # [T] min remaining Joules (inf when static)
 
 
 def _sample_batches(key, x, y, batch_size):
@@ -101,14 +110,29 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         wc, _ = jax.lax.scan(body, w, None, length=fl.local_steps)
         return wc
 
+    temporal = fl.temporal
+
     def round_fn(point, state: SimState, t):
         key, k_chan, k_sel, k_batch, k_noise, k_asel, k_abatch = jax.random.split(state.key, 7)
         scen = point.scenario
+        proc = point.process
 
-        # ---- physical layer: fresh block-fading channels (coherence = 1 round)
-        h = effective_channel(
-            draw_channels_scenario(k_chan, scen, n, fl.num_subcarriers)
-        )
+        # ---- physical layer: block-fading channels (static: i.i.d. redraw;
+        # temporal: Gauss-Markov/walk evolution of the chan_state carry).
+        # step_process is shared with ParameterServer.step so the two tiers
+        # evolve the identical process; battery gating means a client that
+        # cannot afford THIS round's upload is excluded from selection, so
+        # batteries deplete monotonically and never go negative.
+        if temporal:
+            cs = state.chan_state
+            pstep = step_process(k_chan, scen, proc, cs, n,
+                                 fl.num_subcarriers, model_size)
+            h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
+        else:
+            h = effective_channel(
+                draw_channels_scenario(k_chan, scen, n, fl.num_subcarriers)
+            )
+            avail = eligible = None
 
         # ---- client selection (descent set D^(t))
         if method == "gca":
@@ -120,12 +144,17 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                 )
             )(grads0)
             mask = select_clients("gca", k_sel, state.lam, h, fl.clients_per_round,
-                                  grad_norms=gnorms, gca=point.gca)
-            k_denom = jnp.maximum(jnp.sum(mask), 1.0)
+                                  grad_norms=gnorms, gca=point.gca,
+                                  avail=eligible)
         else:
             mask = select_clients(method, k_sel, state.lam, h,
-                                  fl.clients_per_round, C=point.energy_C)
-            k_denom = float(fl.clients_per_round)
+                                  fl.clients_per_round, C=point.energy_C,
+                                  avail=eligible)
+        # the actual scheduled count: == clients_per_round for exact-K
+        # methods on static scenarios, variable for GCA and under
+        # availability/battery gating. Always traced, so the static and the
+        # degenerate-temporal programs do this arithmetic identically.
+        k_denom = jnp.maximum(jnp.sum(mask), 1.0)
 
         # ---- local updates (vmap over all N; only selected enter the sum)
         eta = point.lr0 * (point.lr_decay ** t)
@@ -136,13 +165,37 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         noise_std = 0.0 if noise_free else scen.noise_std
         w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
                                        k_denom)
+        if temporal or method == "gca":
+            # the scheduled set can be EMPTY (battery/availability gating, or
+            # GCA's thresholding): the PS then receives nothing over the air
+            # and must keep the current global model — not eq. (10)'s zero
+            # sum. Exact-K static methods always transmit, so their program
+            # stays untouched.
+            any_sched = jnp.sum(mask) > 0
+            w_new = jax.tree.map(
+                lambda agg, old: jnp.where(any_sched, agg, old), w_new, state.w)
 
         # ---- energy ledger (only the selected set transmits)
         e_round = round_energy(h, mask, model_size, scen.psi, scen.tau)
         energy = state.energy + e_round
 
-        # ---- ascent step on lambda (uniform K, control channel)
-        amask = gumbel_topk_mask(k_asel, jnp.zeros((n,)), fl.clients_per_round)
+        # ---- temporal carry: deplete batteries, persist the process state
+        if temporal:
+            chan_state = commit_process(pstep, cs, mask)
+            avail_count = jnp.sum(eligible)
+            min_battery = jnp.min(chan_state.battery)
+        else:
+            chan_state = state.chan_state
+            avail_count = jnp.float32(n)
+            min_battery = jnp.float32(jnp.inf)
+
+        # ---- ascent step on lambda (uniform K of the AVAILABLE clients,
+        # control channel — no transmit energy, so no battery gating)
+        amask = gumbel_topk_mask(
+            k_asel, jnp.zeros((n,)) + availability_logits(avail),
+            fl.clients_per_round)
+        if temporal:
+            amask = amask * avail
         xab, yab = _sample_batches(k_abatch, x, y, fl.batch_size)
         losses = vloss(w_new, xab, yab)
         lam_new = lambda_ascent(state.lam, losses, amask, point.ascent_lr)
@@ -158,8 +211,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             loss=sel_loss,
             num_scheduled=jnp.sum(mask),
             lam=lam_new,
+            avail_count=avail_count,
+            min_battery=min_battery,
         )
-        return SimState(w_new, lam_new, energy, key), metrics
+        return SimState(w_new, lam_new, energy, key, chan_state), metrics
 
     return round_fn
 
@@ -173,14 +228,29 @@ def make_round_fn(model: SimModel, fl: FLConfig, data, model_size: int):
     return lambda state, t: round_fn(point, state, t)
 
 
-def init_sim_state(model: SimModel, fl: FLConfig, key) -> SimState:
+def init_sim_state(model: SimModel, fl: FLConfig, key,
+                   process=None) -> SimState:
+    """Initial carry. ``process`` (a traced ``ChannelProcess``, e.g. from a
+    ``SweepPoint``) overrides the one derived from ``fl`` so traced knobs like
+    ``battery_init`` ride the sweep's vmap axis; static scenarios get the
+    leaf-less ``chan_state = ()`` and an unchanged key stream."""
     k_init, k_run = jax.random.split(key)
     w0 = model.init(k_init)
+    if process is None:
+        process = process_from_config(fl)
+    chan_state = ()
+    if process.temporal:
+        # fold_in: an independent stream, so the static path's k_init/k_run
+        # consumption (and therefore its trajectories) is untouched
+        chan_state = init_chan_state(
+            process, jax.random.fold_in(k_init, 1), fl.num_clients,
+            fl.num_subcarriers, fl.flat_fading)
     return SimState(
         w=w0,
         lam=jnp.full((fl.num_clients,), 1.0 / fl.num_clients),
         energy=jnp.zeros(()),
         key=k_run,
+        chan_state=chan_state,
     )
 
 
@@ -194,10 +264,11 @@ def run_simulation(
     from repro.core.sweep import sweep_point_from_config  # local: avoid cycle
 
     seed = fl.seed if seed is None else seed
-    state = init_sim_state(model, fl, jax.random.PRNGKey(seed))
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(model, fl, jax.random.PRNGKey(seed),
+                           process=point.process)
     model_size = tree_size(state.w)
     round_fn = make_param_round_fn(model, fl, data, model_size, fl.method)
-    point = sweep_point_from_config(fl)
 
     @jax.jit
     def run(point, state):

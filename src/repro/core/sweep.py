@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig, GCAParams
 from repro.core.channel import SCENARIOS, scenario_from_config
+from repro.core.dynamics import ChannelProcess, process_from_config
 from repro.core.simulator import (SimHistory, init_sim_state,
                                   make_param_round_fn)
 from repro.utils.tree import tree_size
@@ -71,12 +72,14 @@ class SweepPoint:
     ascent_lr: Any = 8e-3
     energy_C: Any = 8.0
     gca: Any = GCAParams()     # NamedTuple of (possibly traced) scalars
+    process: Any = ChannelProcess()  # temporal dynamics (meta: temporal)
     method: str = "ca_afl"
 
 
 jax.tree_util.register_dataclass(
     SweepPoint,
-    data_fields=["scenario", "lr0", "lr_decay", "ascent_lr", "energy_C", "gca"],
+    data_fields=["scenario", "lr0", "lr_decay", "ascent_lr", "energy_C", "gca",
+                 "process"],
     meta_fields=["method"],
 )
 
@@ -91,15 +94,19 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
         ascent_lr=f32(fl.ascent_lr),
         energy_C=f32(fl.energy_C),
         gca=GCAParams(*(f32(v) for v in fl.gca)),
+        process=process_from_config(fl),
         method=fl.method,
     )
 
 
 # Structural FLConfig fields: changing any of these changes the traced
 # program, so specs are grouped by this signature (one compile per group).
+# `temporal` switches the stateless draw for the ChannelProcess carry
+# (core/dynamics.py): all dynamic scenarios share one group per method, and
+# the i.i.d. default keeps compiling to exactly PR 1's program.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
-    "num_subcarriers", "flat_fading", "method",
+    "num_subcarriers", "flat_fading", "temporal", "method",
 )
 
 
@@ -178,7 +185,9 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
                                    noise_free=noise_free)
 
     def run_one(point, seed):
-        state = init_sim_state(model, fl_static, jax.random.PRNGKey(seed))
+        # the point's process carries the traced battery_init for ChanState
+        state = init_sim_state(model, fl_static, jax.random.PRNGKey(seed),
+                               process=point.process)
         _, hist = jax.lax.scan(
             lambda s, t: round_fn(point, s, t), state,
             jnp.arange(fl_static.rounds))
@@ -288,6 +297,8 @@ class SweepResult:
             std = np.asarray(h.std_acc)[:, -window:].mean(1)     # [R]
             energy = np.asarray(h.energy)[:, -1]                 # [R]
             sched = np.asarray(h.num_scheduled)[:, -window:].mean(1)  # [R]
+            avail = np.asarray(h.avail_count)[:, -window:].mean(1)    # [R]
+            min_batt = float(np.asarray(h.min_battery)[:, -1].mean())
             out[lbl] = {
                 "avg_acc": float(avg.mean()),
                 "avg_acc_std": float(avg.std()),
@@ -298,6 +309,9 @@ class SweepResult:
                 "energy": float(energy.mean()),
                 "energy_std": float(energy.std()),
                 "num_scheduled": float(sched.mean()),
+                "avail_count": float(avail.mean()),
+                # None (JSON null) for static scenarios, where it is +inf
+                "min_battery": min_batt if np.isfinite(min_batt) else None,
             }
         return out
 

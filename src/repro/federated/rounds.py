@@ -55,7 +55,12 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
     """
 
     def weighted_loss_and_perex(p, b, mask):
-        w = client_weights(mask, b["client_ids"], float(clients_per_round))
+        # K as the actual scheduled count: identical to the static
+        # clients_per_round for exact-K selection, and the correct eq. (10)
+        # normalizer when availability/battery gating (or GCA) schedules a
+        # variable number of clients
+        k_sched = jnp.maximum(jnp.sum(mask), 1.0)
+        w = client_weights(mask, b["client_ids"], k_sched)
         if fused_probe:
             # one forward yields BOTH the weighted scalar and per-ex NLL
             per_ex = _per_example_nll(model, p, b, ctx)
@@ -96,9 +101,12 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
             (loss, grads), per_mb = jax.lax.scan(acc_step, zero, mb)
             per_ex = per_mb.reshape(-1)
 
-        # --- AirComp receiver noise: z^(t)/K on the aggregated update ------
+        # --- AirComp receiver noise: z^(t)/K on the aggregated update, with
+        # K the ACTUAL scheduled count — the same normalizer the gradient
+        # weights use, mirroring the simulator's aircomp_aggregate ----------
         if noise_std:
-            grads = add_awgn(grads, key, noise_std / clients_per_round)
+            grads = add_awgn(grads, key,
+                             noise_std / jnp.maximum(jnp.sum(mask), 1.0))
 
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = apply_updates(params, updates)
@@ -151,6 +159,10 @@ def add_awgn(grads, key, std: float):
 
 
 def _per_example_nll(model, params, batch, ctx):
+    # simulator-style models (e.g. models.logreg.logistic_regression_prod)
+    # expose per_example_nll directly; architecture models go through cfg
+    if hasattr(model, "per_example_nll"):
+        return model.per_example_nll(params, batch)
     cfg = model.cfg
     if cfg.family == "vlm":
         logits = model.mod.forward(cfg, params, batch["tokens"], batch["images"], ctx)
@@ -194,3 +206,41 @@ def per_client_losses(model, params, batch, num_clients: int, ctx=None,
     sums = jnp.zeros((num_clients,), per_ex.dtype).at[cid_flat].add(per_ex)
     cnts = jnp.zeros((num_clients,), per_ex.dtype).at[cid_flat].add(ones)
     return sums / jnp.maximum(cnts, 1.0)
+
+
+def make_grad_norm_probe(model, num_clients: int, ctx=None):
+    """GCA's control-channel probe: [N] per-client gradient norms at w^t.
+
+    GCA selection needs ‖∇f_i(w^t)‖ BEFORE the round's mask exists, so this
+    runs as a separate forward+backward per client — sequential via
+    ``lax.scan`` (N small grads ≈ one full-batch grad in total compute,
+    1/N of its activation memory). Requires the round's batch layout: each
+    client's examples contiguous and equally sized (B % N == 0), as produced
+    by the data pipeline — the reshape below slices clients apart.
+    """
+
+    def client_loss(params, cbatch):
+        return jnp.mean(_per_example_nll(model, params, cbatch, ctx))
+
+    gfn = jax.grad(client_loss)
+
+    def probe(params, batch):
+        bsz = batch["client_ids"].shape[0]
+        assert bsz % num_clients == 0, "probe needs equal per-client batches"
+        mb = {k: v.reshape((num_clients, bsz // num_clients) + v.shape[1:])
+              for k, v in batch.items()}
+
+        def one(_, cbatch):
+            g = gfn(params, cbatch)
+            norm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(l.astype(jnp.float32)))
+                for l in jax.tree_util.tree_leaves(g)))
+            return None, norm
+
+        _, norms = jax.lax.scan(one, None, mb)
+        # scatter by each block's OBSERVED client id, so contiguous-but-
+        # permuted batches still attribute every norm to the right client
+        return jnp.zeros((num_clients,), norms.dtype).at[
+            mb["client_ids"][:, 0]].set(norms)
+
+    return probe

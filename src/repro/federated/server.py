@@ -5,22 +5,37 @@ handles is O(N) scalars per round — channel states, selection probabilities,
 λ, energy — the paper's dedicated control channel. The heavy lifting (local
 grads + over-the-air aggregation) happens inside the compiled round on the
 mesh.
+
+Cross-tier contract: the per-round PRNG discipline is IDENTICAL to the
+simulator's ``round_fn`` — one 7-way split of the server key into
+``(key, k_chan, k_sel, k_batch, k_noise, k_asel, k_abatch)`` with the same
+role order (the two batch keys are unused here because batches arrive from
+the data pipeline). With matching keys/initial state the two tiers draw the
+same channels, the same selection masks and the same ascent sets, which is
+what ``tests/test_cross_tier.py`` pins so the tiers cannot drift silently.
+The temporal ``ChannelProcess`` (``core/dynamics.py``) is evolved host-side
+with the same fold-in streams as the simulator's scan carry.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.channel import (draw_channels_scenario, effective_channel,
                                 scenario_from_config)
 from repro.core.dro import lambda_ascent
+from repro.core.dynamics import (commit_process, init_chan_state,
+                                 process_from_config, step_process)
 from repro.core.energy import round_energy
-from repro.core.selection import gumbel_topk_mask, select_clients
-from repro.federated.rounds import make_fl_round
+from repro.core.selection import (availability_logits, gumbel_topk_mask,
+                                  select_clients)
+from repro.federated.rounds import (FLRoundMetrics, make_fl_round,
+                                    make_grad_norm_probe, per_client_losses)
 from repro.utils.tree import tree_size
 
 
@@ -32,6 +47,7 @@ class ServerState:
     round: int = 0
     energy_joules: float = 0.0
     history: List[Dict] = field(default_factory=list)
+    chan_state: Any = ()  # ChanState for temporal scenarios, () otherwise
 
 
 class ParameterServer:
@@ -50,59 +66,146 @@ class ParameterServer:
         self.optimizer = optimizer
         # Same parameterized physical layer as the simulator/sweep tier, so
         # scenario knobs (shadowing, per-client pathloss, floor) behave
-        # identically across tiers.
+        # identically across tiers; ditto the temporal ChannelProcess.
         self.scenario = scenario_from_config(fl)
+        self.process = process_from_config(fl)
+        self._model_size = None  # resolved lazily from the params pytree
+        # GCA needs per-client gradient norms BEFORE selection: a dedicated
+        # jitted probe at the current params (fixes the former ValueError)
+        self._grad_probe = None
+        if fl.method == "gca":
+            self._grad_probe = make_grad_norm_probe(model, fl.num_clients,
+                                                    ctx=ctx)
+            if jit_round:
+                self._grad_probe = jax.jit(self._grad_probe)
+        # control-channel loss probe for rounds where NOBODY transmits
+        # (battery/availability gating): the λ-ascent still needs f_i(w̄)
+        self._loss_probe = lambda p, b: per_client_losses(
+            model, p, b, fl.num_clients, ctx)
+        if jit_round:
+            self._loss_probe = jax.jit(self._loss_probe)
+
+    def _check_probe_layout(self, batch) -> None:
+        """The grad-norm probe slices the batch into one equal-size block
+        per client: verify (host-side, pre-jit) that every block is a single
+        client and every client appears exactly once — a violating layout
+        would silently attribute norms to the wrong clients."""
+        cids = np.asarray(batch["client_ids"])
+        n = self.fl.num_clients
+        if cids.shape[0] % n:
+            raise ValueError("GCA probe needs batch size divisible by N")
+        blocks = cids.reshape(n, -1)
+        if not (blocks == blocks[:, :1]).all() or \
+                len(set(blocks[:, 0].tolist())) != n:
+            raise ValueError(
+                "GCA probe needs one contiguous equal-size block of examples "
+                "per client (any client order), got mixed/missing clients")
 
     def init_state(self, key) -> ServerState:
-        params = self.model.init(key)
+        # identical key discipline to init_sim_state: model init from the
+        # split child, ChanState from fold_in(k_init, 1) — so both tiers
+        # seeded with the same key start from the same process state (and,
+        # for a shared model, the same parameters)
+        k_init, _ = jax.random.split(key)
+        params = self.model.init(k_init)
         self._model_size = tree_size(params)
+        chan_state = ()
+        if self.process.temporal:
+            chan_state = init_chan_state(
+                self.process, jax.random.fold_in(k_init, 1),
+                self.fl.num_clients, self.fl.num_subcarriers,
+                self.fl.flat_fading)
         return ServerState(
             params=params,
             opt_state=self.optimizer.init(params),
             lam=jnp.full((self.fl.num_clients,), 1.0 / self.fl.num_clients),
+            chan_state=chan_state,
         )
-
-    def _next_key(self):
-        self.key, k = jax.random.split(self.key)
-        return k
 
     def step(self, state: ServerState, batch: Dict) -> ServerState:
         """One CA-AFL round. batch carries tokens/labels/client_ids (+modal)."""
         fl = self.fl
-        k_chan, k_sel, k_noise, k_asc = jax.random.split(self._next_key(), 4)
+        if self._model_size is None:
+            self._model_size = tree_size(state.params)
+        # identical role order to the simulator round (see module docstring);
+        # k_batch/k_abatch are the simulator's data-sampling keys, unused here
+        (self.key, k_chan, k_sel, _k_batch, k_noise, k_asel,
+         _k_abatch) = jax.random.split(self.key, 7)
 
-        # --- physical layer + selection (host-side, control channel) -------
-        h = effective_channel(draw_channels_scenario(
-            k_chan, self.scenario, fl.num_clients, fl.num_subcarriers))
-        mask = select_clients(fl.method, k_sel, state.lam, h,
-                              fl.clients_per_round, C=fl.energy_C,
-                              gca=fl.gca)
+        # --- physical layer + selection (host-side, control channel);
+        # step_process is the same tick the simulator's scan body runs ------
+        if self.process.temporal:
+            cs = state.chan_state
+            pstep = step_process(k_chan, self.scenario, self.process, cs,
+                                 fl.num_clients, fl.num_subcarriers,
+                                 self._model_size)
+            h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
+        else:
+            h = effective_channel(draw_channels_scenario(
+                k_chan, self.scenario, fl.num_clients, fl.num_subcarriers))
+            avail = eligible = None
+
+        if fl.method == "gca":
+            self._check_probe_layout(batch)
+            gnorms = self._grad_probe(state.params, batch)
+            mask = select_clients("gca", k_sel, state.lam, h,
+                                  fl.clients_per_round, grad_norms=gnorms,
+                                  gca=fl.gca, avail=eligible)
+        else:
+            mask = select_clients(fl.method, k_sel, state.lam, h,
+                                  fl.clients_per_round, C=fl.energy_C,
+                                  gca=fl.gca, avail=eligible)
 
         # --- compiled round on the mesh ------------------------------------
-        params, opt_state, metrics = self.round_fn(
-            state.params, state.opt_state, batch, mask, k_noise)
+        if int(jnp.sum(mask)) == 0:
+            # nothing transmits (drained batteries / empty availability):
+            # the PS receives no superposition, so the global model must NOT
+            # move (mirrors the simulator's empty-set guard) — only the
+            # control-channel loss probe runs, for the λ-ascent below
+            params, opt_state = state.params, state.opt_state
+            metrics = FLRoundMetrics(
+                loss=jnp.zeros(()),
+                client_losses=self._loss_probe(state.params, batch),
+                grad_norm=jnp.zeros(()))
+        else:
+            params, opt_state, metrics = self.round_fn(
+                state.params, state.opt_state, batch, mask, k_noise)
 
         # --- energy ledger (eqs. 3-6; only the selected set transmits) -----
         e_round = float(round_energy(h, mask, self._model_size, fl.psi, fl.tau))
 
-        # --- λ-ascent on a uniform K-subset (Alg. 1 lines 10-15) -----------
-        amask = gumbel_topk_mask(k_asc, jnp.zeros((fl.num_clients,)),
-                                 fl.clients_per_round)
+        # --- temporal carry: battery depletion + process state -------------
+        if self.process.temporal:
+            chan_state = commit_process(pstep, cs, mask)
+        else:
+            chan_state = state.chan_state
+
+        # --- λ-ascent on a uniform K-subset of the AVAILABLE clients -------
+        amask = gumbel_topk_mask(
+            k_asel, jnp.zeros((fl.num_clients,)) + availability_logits(avail),
+            fl.clients_per_round)
+        if avail is not None:
+            amask = amask * avail
         lam = lambda_ascent(state.lam, metrics.client_losses, amask, fl.ascent_lr)
 
-        state.history.append({
+        row = {
             "round": state.round,
             "loss": float(metrics.loss),
             "energy_j": e_round,
             "num_scheduled": int(jnp.sum(mask)),
             "worst_client_loss": float(jnp.max(metrics.client_losses)),
             "grad_norm": float(metrics.grad_norm),
-        })
+        }
+        if self.process.temporal:
+            row["avail_count"] = int(jnp.sum(eligible))
+            row["min_battery"] = float(jnp.min(chan_state.battery))
+        state.history.append(row)
         return ServerState(
             params=params, opt_state=opt_state, lam=lam,
             round=state.round + 1,
             energy_joules=state.energy_joules + e_round,
             history=state.history,
+            chan_state=chan_state,
         )
 
     def run(self, state: ServerState, batches, rounds: int,

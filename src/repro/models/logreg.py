@@ -17,6 +17,19 @@ class SimModel(NamedTuple):
     accuracy: Callable  # (params, x, y) -> scalar accuracy
 
 
+class ProdSimModel(NamedTuple):
+    """Production-tier (``federated.rounds``/``ParameterServer``) interface
+    over a simulator model: batches are dicts with ``x``/``labels``/
+    ``client_ids`` (+optional per-example ``weights``), and the per-example
+    NLL feeds the λ-ascent control channel. This is what lets one logreg run
+    through BOTH tiers for the cross-tier differential test."""
+
+    init: Callable             # key -> params
+    loss_fn: Callable          # (params, batch, ctx) -> scalar weighted loss
+    per_example_nll: Callable  # (params, batch) -> [B]
+    accuracy: Callable         # (params, x, y) -> scalar
+
+
 def _xent(logits, y):
     logp = jax.nn.log_softmax(logits)
     return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
@@ -39,6 +52,32 @@ def logistic_regression(dim: int = 784, num_classes: int = 10) -> SimModel:
         return jnp.mean((jnp.argmax(logits(params, x), -1) == y).astype(jnp.float32))
 
     return SimModel(init, loss, accuracy)
+
+
+def logistic_regression_prod(dim: int = 784,
+                             num_classes: int = 10) -> ProdSimModel:
+    """The paper's logreg wearing the production-tier model interface.
+
+    Shares ``logistic_regression``'s init (zeros), so both tiers start from
+    identical parameters without any state copying.
+    """
+    sim = logistic_regression(dim, num_classes)
+
+    def per_example_nll(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(
+            logp, batch["labels"][..., None], axis=-1)[..., 0]
+
+    def loss_fn(params, batch, ctx=None):
+        per_ex = per_example_nll(params, batch)
+        if "weights" in batch:
+            per_ex = per_ex * batch["weights"]
+        return jnp.mean(per_ex)
+
+    return ProdSimModel(init=sim.init, loss_fn=loss_fn,
+                        per_example_nll=per_example_nll,
+                        accuracy=sim.accuracy)
 
 
 def mlp(dim: int = 784, hidden: int = 64, num_classes: int = 10) -> SimModel:

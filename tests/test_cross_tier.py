@@ -1,0 +1,223 @@
+"""Cross-tier equivalence: one ``ParameterServer.step`` round must match one
+simulator ``round_fn`` round numerically on logreg with shared keys — the
+same selection mask, λ update, energy ledger and aggregated weights — so the
+production and simulator tiers can never drift apart silently. Also the
+server-tier GCA path (gradient-norm probe), which used to crash."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.energy import transmit_energy
+from repro.core.simulator import init_sim_state, make_param_round_fn
+from repro.core.sweep import sweep_point_from_config
+from repro.federated.rounds import make_grad_norm_probe
+from repro.federated.server import ParameterServer, ServerState
+from repro.models.logreg import logistic_regression, logistic_regression_prod
+from repro.optim import sgd
+from repro.utils.tree import tree_size
+
+N, DIM, CLS = 6, 16, 10
+PER_CLIENT = 4  # examples per client in the production batch
+
+
+def _fl(method="ca_afl", **kw):
+    return FLConfig(num_clients=N, clients_per_round=3, rounds=1,
+                    batch_size=PER_CLIENT, local_steps=1, method=method,
+                    lr0=0.2, lr_decay=0.995, ascent_lr=1e-2, energy_C=4.0,
+                    noise_std=0.0, **kw)
+
+
+@pytest.fixture(scope="module")
+def tier_data():
+    """One example per client (shard size 1): the simulator's with-replacement
+    batch sampler then draws that row deterministically, so both tiers train
+    on literally the same data and the comparison is exact."""
+    key = jax.random.PRNGKey(7)
+    xs = jax.random.normal(key, (N, 1, DIM))
+    ys = jax.random.randint(jax.random.fold_in(key, 1), (N, 1), 0, CLS)
+    return xs, ys
+
+
+def _prod_batch(xs, ys):
+    """The production-tier view of the same data: PER_CLIENT copies of each
+    client's row, client-contiguous (the layout the round + probe require)."""
+    x = jnp.repeat(xs[:, 0, :], PER_CLIENT, axis=0)            # [N*m, D]
+    labels = jnp.repeat(ys[:, 0], PER_CLIENT, axis=0)          # [N*m]
+    cids = jnp.repeat(jnp.arange(N), PER_CLIENT)
+    return {"x": x, "labels": labels, "client_ids": cids}
+
+
+@pytest.mark.parametrize("method", ["ca_afl", "fedavg", "afl", "greedy"])
+def test_server_step_matches_simulator_round(tier_data, method):
+    xs, ys = tier_data
+    fl = _fl(method)
+    sim_model = logistic_regression(DIM, CLS)
+    data = (xs, ys, xs, ys)
+
+    # --- simulator tier: one parameterized round ------------------------
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    model_size = tree_size(state.w)
+    round_fn = make_param_round_fn(sim_model, fl, data, model_size, method)
+    new_state, hist = jax.jit(lambda p, s: round_fn(p, s, 0))(point, state)
+
+    # --- production tier: same key, same params, same λ -----------------
+    prod_model = logistic_regression_prod(DIM, CLS)
+    ps = ParameterServer(prod_model, sgd(fl.lr0), fl, seed=0)
+    ps.key = state.key  # align the per-round 7-way split with the simulator
+    srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
+                      opt_state=sgd(fl.lr0).init(state.w),
+                      lam=state.lam)
+    srv = ps.step(srv, _prod_batch(xs, ys))
+
+    # selection mask (via scheduled count + energy), energy ledger, λ, and
+    # the aggregated model must all agree
+    assert srv.history[-1]["num_scheduled"] == int(hist.num_scheduled)
+    np.testing.assert_allclose(srv.energy_joules, float(hist.energy),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(srv.lam), np.asarray(new_state.lam),
+                               atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(srv.params),
+                    jax.tree_util.tree_leaves(new_state.w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_server_step_matches_simulator_round_temporal(tier_data):
+    """The temporal ChannelProcess evolves identically host-side: same
+    degenerate-process trick, now through the ChanState carry on both tiers."""
+    xs, ys = tier_data
+    fl = _fl("ca_afl", temporal=True, battery_init=1.0)
+    sim_model = logistic_regression(DIM, CLS)
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    model_size = tree_size(state.w)
+    round_fn = make_param_round_fn(sim_model, fl, (xs, ys, xs, ys),
+                                   model_size, "ca_afl")
+    new_state, hist = jax.jit(lambda p, s: round_fn(p, s, 0))(point, state)
+
+    prod_model = logistic_regression_prod(DIM, CLS)
+    ps = ParameterServer(prod_model, sgd(fl.lr0), fl, seed=0)
+    ps.key = state.key
+    # init_state mirrors init_sim_state's key discipline: same outer key =>
+    # same initial ChanState (and same zeros-init logreg params)
+    srv = ps.init_state(jax.random.PRNGKey(0))
+    for a, b in zip(srv.chan_state, state.chan_state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
+                      opt_state=sgd(fl.lr0).init(state.w),
+                      lam=state.lam, chan_state=srv.chan_state)
+    srv = ps.step(srv, _prod_batch(xs, ys))
+
+    np.testing.assert_allclose(srv.energy_joules, float(hist.energy),
+                               rtol=1e-5)
+    assert srv.history[-1]["avail_count"] == int(hist.avail_count)
+    np.testing.assert_allclose(np.asarray(srv.chan_state.battery),
+                               np.asarray(new_state.chan_state.battery),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(srv.lam), np.asarray(new_state.lam),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# GCA on the server tier (regression: used to raise ValueError)
+# ---------------------------------------------------------------------------
+
+
+def test_grad_norm_probe_matches_per_client_grads(tier_data):
+    xs, ys = tier_data
+    prod_model = logistic_regression_prod(DIM, CLS)
+    params = prod_model.init(jax.random.PRNGKey(0))
+    params = {"w": params["w"] + 0.1, "b": params["b"] - 0.05}  # off-zero
+    batch = _prod_batch(xs, ys)
+    norms = make_grad_norm_probe(prod_model, N)(params, batch)
+    assert norms.shape == (N,)
+    sim_model = logistic_regression(DIM, CLS)
+    for c in range(N):
+        g = jax.grad(sim_model.loss)(params, xs[c], ys[c])
+        ref = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                           for l in jax.tree_util.tree_leaves(g)))
+        np.testing.assert_allclose(float(norms[c]), float(ref), rtol=1e-5)
+
+
+def test_grad_norm_probe_handles_permuted_client_blocks(tier_data):
+    """Client blocks need not arrive in ascending id order: norms are
+    scattered by the observed ids, not by block position."""
+    xs, ys = tier_data
+    prod_model = logistic_regression_prod(DIM, CLS)
+    params = prod_model.init(jax.random.PRNGKey(0))
+    params = {"w": params["w"] + 0.1, "b": params["b"] - 0.05}
+    batch = _prod_batch(xs, ys)
+    probe = make_grad_norm_probe(prod_model, N)
+    ref = probe(params, batch)
+    perm = np.random.default_rng(0).permutation(N)
+    idx = jnp.asarray((perm[:, None] * PER_CLIENT
+                       + np.arange(PER_CLIENT)).reshape(-1))
+    shuffled = {k: v[idx] for k, v in batch.items()}
+    got = probe(params, shuffled)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+
+def test_server_gca_smoke(tier_data):
+    """GCA end-to-end on the production tier: probe feeds selection, rounds
+    complete, scheduled counts stay in range."""
+    xs, ys = tier_data
+    fl = _fl("gca")
+    ps = ParameterServer(logistic_regression_prod(DIM, CLS), sgd(0.1), fl,
+                         seed=1)
+    state = ps.init_state(jax.random.PRNGKey(2))
+
+    def batches():
+        while True:
+            yield _prod_batch(xs, ys)
+
+    state = ps.run(state, batches(), rounds=3, log_fn=None)
+    assert state.round == 3
+    assert all(np.isfinite(h["loss"]) for h in state.history)
+    assert all(0 <= h["num_scheduled"] <= N for h in state.history)
+    assert state.energy_joules >= 0.0
+
+
+def test_server_gca_rejects_mixed_client_blocks(tier_data):
+    """Interleaved client rows would silently mis-attribute probe norms;
+    the server validates the layout host-side and refuses."""
+    xs, ys = tier_data
+    ps = ParameterServer(logistic_regression_prod(DIM, CLS), sgd(0.1),
+                         _fl("gca"), seed=0)
+    state = ps.init_state(jax.random.PRNGKey(0))
+    bad = _prod_batch(xs, ys)
+    bad["client_ids"] = jnp.tile(jnp.arange(N), PER_CLIENT)  # interleaved
+    with pytest.raises(ValueError):
+        ps.step(state, bad)
+
+
+def test_battery_exhaustion_stops_spending_on_server(tier_data):
+    """Production tier honours battery budgets: with a budget smaller than
+    one upload, nobody transmits and the ledger stays at zero."""
+    xs, ys = tier_data
+    # one upload costs psi*M*tau/h^2 >= psi*M*tau (h <= ~few): make the
+    # budget orders of magnitude below that
+    model_size = DIM * CLS + CLS
+    tiny = float(transmit_energy(jnp.array(10.0), model_size, 0.5e-3, 1e-3)) / 1e3
+    fl = _fl("fedavg", temporal=True, battery_init=tiny)
+    ps = ParameterServer(logistic_regression_prod(DIM, CLS), sgd(0.1), fl,
+                         seed=0)
+    state = ps.init_state(jax.random.PRNGKey(0))
+
+    def batches():
+        while True:
+            yield _prod_batch(xs, ys)
+
+    p0 = jax.tree.map(jnp.copy, state.params)
+    state = ps.run(state, batches(), rounds=3, log_fn=None)
+    assert state.energy_joules == 0.0
+    assert all(h["num_scheduled"] == 0 for h in state.history)
+    assert all(h["avail_count"] == 0 for h in state.history)
+    # the PS received nothing over the air: the global model must not move
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

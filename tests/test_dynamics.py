@@ -1,0 +1,271 @@
+"""Temporal scenario dynamics (core/dynamics.py): degenerate-process
+bit-for-bit identity with the static path, Gauss-Markov correlation,
+availability/battery invariants across tiers, and the compilation-group
+contract for dynamic sweeps."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import sweep
+from repro.core.channel import SCENARIOS, scenario_from_config
+from repro.core.dynamics import (evolve_availability, evolve_fading,
+                                 init_chan_state, process_from_config)
+from repro.core.simulator import run_simulation
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+N, DIM = 12, 32
+MODEL = logistic_regression(dim=DIM, num_classes=10)
+
+# a battery that binds within a few rounds at this scale (M = 330 params,
+# per-upload energy ~ psi*M*tau/h^2 ~ 1.7e-4/h^2 J)
+TIGHT_BATTERY = 1.2e-3
+
+
+@pytest.fixture(scope="module")
+def dyn_data():
+    x, y, xt, yt = make_fmnist_like(num_train=600, num_test=240, dim=DIM,
+                                    seed=0)
+    xs, ys = sorted_label_shards(x, y, N)
+    xts, yts = sorted_label_shards(xt, yt, N)
+    return xs, ys, xts, yts
+
+
+def _fl(method="ca_afl", rounds=8, **kw):
+    return FLConfig(num_clients=N, clients_per_round=5, rounds=rounds,
+                    batch_size=16, method=method, lr0=0.3, lr_decay=0.995,
+                    ascent_lr=2e-2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The carry contract: static scenarios are untouched, and a degenerate
+# temporal process reproduces them bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["ca_afl", "fedavg", "greedy", "gca"])
+def test_degenerate_process_matches_static_bitwise(dyn_data, method):
+    """temporal=True with all identity knobs (rho=0, no walk, no dropout,
+    infinite battery) consumes the same key streams and computes the same
+    arithmetic as the stateless path — trajectories must be IDENTICAL, which
+    pins that the dynamics thread-through did not perturb the default
+    (i.i.d.) program."""
+    static = run_simulation(MODEL, _fl(method), dyn_data, seed=3)
+    degen = run_simulation(MODEL, _fl(method, temporal=True), dyn_data, seed=3)
+    for name in static._fields:
+        if name == "min_battery":
+            continue  # inf (static sentinel) vs inf battery: both inf anyway
+        if name == "energy":
+            # the dynamic program carries extra reductions (avail counts,
+            # battery gating) that XLA may fuse WITH the eq. (3-6) ledger
+            # sum, reassociating it by one f32 ulp — the mask, the channels
+            # and every model-trajectory field below are exactly equal
+            np.testing.assert_allclose(
+                np.asarray(static.energy), np.asarray(degen.energy),
+                rtol=5e-7, err_msg=f"{method}:energy")
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(static, name)), np.asarray(getattr(degen, name)),
+            err_msg=f"{method}:{name}")
+    assert np.all(np.isinf(np.asarray(degen.min_battery)))
+    np.testing.assert_array_equal(np.asarray(static.avail_count), float(N))
+
+
+def test_static_history_records_sentinels(dyn_data):
+    hist = run_simulation(MODEL, _fl("afl", rounds=4), dyn_data, seed=0)
+    np.testing.assert_array_equal(np.asarray(hist.avail_count), float(N))
+    assert np.all(np.isinf(np.asarray(hist.min_battery)))
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Markov fading + shadowing walk
+# ---------------------------------------------------------------------------
+
+
+def _scan_fading(rho, rounds=200, rho_shadow=0.0, walk_std=0.0):
+    fl = _fl(temporal=True, rho_fading=rho, rho_shadow=rho_shadow,
+             shadow_walk_std=walk_std)
+    scen = scenario_from_config(fl)
+    proc = process_from_config(fl)
+    cs = init_chan_state(proc, jax.random.PRNGKey(0), N, fl.num_subcarriers,
+                         fl.flat_fading)
+
+    def step(carry, key):
+        h_mag, fast, log_shadow = evolve_fading(key, scen, proc, carry, N,
+                                                fl.num_subcarriers)
+        return carry._replace(fast=fast, log_shadow=log_shadow), h_mag[:, 0]
+
+    _, hs = jax.lax.scan(step, cs, jax.random.split(jax.random.PRNGKey(1),
+                                                    rounds))
+    return np.asarray(hs)  # [T, N]
+
+
+def _lag1_autocorr(series):
+    a, b = series[:-1], series[1:]
+    a = a - a.mean()
+    b = b - b.mean()
+    return float((a * b).mean() / np.sqrt((a**2).mean() * (b**2).mean()))
+
+
+def test_markov_fading_is_temporally_correlated():
+    """rho=0.95 channels persist across rounds; rho=0 channels do not."""
+    corr_hi = _lag1_autocorr(_scan_fading(0.95)[:, 0])
+    corr_lo = _lag1_autocorr(_scan_fading(0.0)[:, 0])
+    assert corr_hi > 0.6
+    assert abs(corr_lo) < 0.25
+
+
+def test_markov_fading_preserves_stationary_scale():
+    """The Gauss-Markov update keeps the Rayleigh unit-mean-square law:
+    mean |h|^2 ~= 1 regardless of rho (no energy drift over time)."""
+    for rho in (0.0, 0.9):
+        hs = _scan_fading(rho, rounds=400)
+        assert abs(float((hs**2).mean()) - 1.0) < 0.15, rho
+
+
+def test_shadow_walk_wanders():
+    """A near-unit-root shadowing walk spreads the channel distribution over
+    time (slow mobility), unlike the rho_shadow=0 fast-only process."""
+    hs = _scan_fading(0.0, rounds=300, rho_shadow=0.995, walk_std=0.15)
+    early = np.log(hs[:30]).std()
+    late = np.log(hs[-30:]).std()
+    assert late > early * 1.3
+
+
+# ---------------------------------------------------------------------------
+# Availability + battery invariants (simulator tier)
+# ---------------------------------------------------------------------------
+
+
+def test_availability_chain_stationary_rate():
+    proc = process_from_config(_fl(temporal=True, p_dropout=0.1, p_return=0.3))
+    avail = jnp.ones((500,))
+
+    def step(a, key):
+        a = evolve_availability(key, proc, a)
+        return a, a.mean()
+
+    _, rates = jax.lax.scan(step, avail,
+                            jax.random.split(jax.random.PRNGKey(0), 300))
+    # stationary availability = p_return / (p_dropout + p_return) = 0.75
+    assert abs(float(jnp.asarray(rates)[-100:].mean()) - 0.75) < 0.05
+
+
+def test_unavailable_clients_never_scheduled_in_simulation(dyn_data):
+    """End-to-end: with heavy churn, every round schedules no more clients
+    than are schedulable (and the run stays finite/learnable)."""
+    fl = _fl("ca_afl", rounds=12, temporal=True, p_dropout=0.4, p_return=0.3)
+    hist = run_simulation(MODEL, fl, dyn_data, seed=0)
+    sched = np.asarray(hist.num_scheduled)
+    avail = np.asarray(hist.avail_count)
+    assert np.all(sched <= avail + 1e-6)
+    assert np.all(sched <= fl.clients_per_round)
+    assert bool(jnp.all(jnp.isfinite(hist.avg_acc)))
+
+
+def test_battery_depletes_monotonically_and_gates_scheduling(dyn_data):
+    fl = _fl("fedavg", rounds=20, temporal=True, battery_init=TIGHT_BATTERY)
+    hist = run_simulation(MODEL, fl, dyn_data, seed=0)
+    mb = np.asarray(hist.min_battery)
+    assert np.all(mb >= -1e-9)                # never overdrawn
+    assert np.all(np.diff(mb) <= 1e-9)        # monotone depletion
+    assert mb[-1] < mb[0]                     # actually spent something
+    # once budgets bind the schedulable pool shrinks below N
+    assert np.asarray(hist.avail_count)[-1] < N
+    # and the energy ledger slows down accordingly (strictly bounded by the
+    # total budget: no client can spend more than its battery)
+    assert float(np.asarray(hist.energy)[-1]) <= N * TIGHT_BATTERY + 1e-6
+
+
+def test_empty_schedule_keeps_model_and_spends_nothing(dyn_data):
+    """With budgets below one upload, nobody ever transmits: the global
+    model must survive untouched (eq. 10's zero sum must NOT be applied),
+    the ledger stays at zero, and the run stays finite."""
+    fl = _fl("ca_afl", rounds=6, temporal=True, battery_init=1e-12)
+    hist = run_simulation(MODEL, fl, dyn_data, seed=0)
+    assert np.all(np.asarray(hist.num_scheduled) == 0)
+    assert np.all(np.asarray(hist.avail_count) == 0)
+    assert np.all(np.asarray(hist.energy) == 0.0)
+    # the model never changes => test accuracy is flat across rounds
+    acc = np.asarray(hist.avg_acc)
+    np.testing.assert_array_equal(acc, acc[0])
+    assert np.all(np.isfinite(np.asarray(hist.loss)))
+
+
+def test_battery_constrained_caps_total_energy_vs_unconstrained(dyn_data):
+    fl_free = _fl("afl", rounds=25, temporal=True)
+    fl_batt = _fl("afl", rounds=25, temporal=True, battery_init=TIGHT_BATTERY)
+    e_free = float(np.asarray(
+        run_simulation(MODEL, fl_free, dyn_data, seed=1).energy)[-1])
+    e_batt = float(np.asarray(
+        run_simulation(MODEL, fl_batt, dyn_data, seed=1).energy)[-1])
+    assert e_batt <= N * TIGHT_BATTERY + 1e-6
+    assert e_batt < e_free
+
+
+# ---------------------------------------------------------------------------
+# Sweep-engine integration: registry entries + compilation groups
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_registry_entries_are_valid_configs():
+    for name in ("markov_fading", "commuter_mobility", "battery_constrained"):
+        fl = replace(_fl(), **SCENARIOS[name])
+        assert fl.temporal, name
+        assert process_from_config(fl).temporal, name
+
+
+def test_dynamic_scenarios_share_one_compile_per_method(dyn_data):
+    """The compilation-group contract: every temporal scenario (whatever its
+    knobs — correlated fading, mobility churn, battery budgets, or a
+    degenerate i.i.d.-equivalent process) rides ONE executable per selection
+    method; their knobs are vmap'd sweep-point leaves."""
+    scenarios = ("markov_fading", "commuter_mobility",
+                 ("battery_tight", {"temporal": True,
+                                    "battery_init": TIGHT_BATTERY}),
+                 ("degenerate_iid", {"temporal": True}))
+    specs = sweep.expand_grid(
+        _fl(rounds=6), variants={"ca_afl": {"method": "ca_afl"},
+                                 "fedavg": {"method": "fedavg"}},
+        scenarios=scenarios)
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, dyn_data, specs, seeds=(0, 1))
+    assert sweep.trace_count() == 2  # one per method for the whole dyn grid
+    for lbl in res.labels:
+        assert bool(jnp.all(jnp.isfinite(res.history(lbl).avg_acc))), lbl
+
+
+def test_mixed_static_dynamic_grid_groups_by_structure(dyn_data):
+    """A grid mixing i.i.d. and temporal scenarios: the static cells keep
+    compiling to PR 1's program (their own group), the dynamic cells share
+    theirs — structure, not knob values, decides the grouping."""
+    specs = sweep.expand_grid(
+        _fl(rounds=6), variants={"ca_afl": {}},
+        scenarios=("default", "noisy_uplink",           # static group
+                   "markov_fading", "battery_constrained"))  # temporal group
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, dyn_data, specs, seeds=(0,))
+    assert sweep.trace_count() == 2  # {static, temporal} x {ca_afl}
+    # the static cells must equal their standalone runs (no perturbation)
+    ref = run_simulation(MODEL, _fl(rounds=6), dyn_data, seed=0)
+    np.testing.assert_allclose(
+        np.asarray(res.history("ca_afl").avg_acc)[0],
+        np.asarray(ref.avg_acc), atol=1e-6)
+
+
+def test_sweep_summary_reports_dynamics_columns(dyn_data):
+    specs = [("batt", _fl("fedavg", rounds=10, temporal=True,
+                          battery_init=TIGHT_BATTERY)),
+             ("plain", _fl("fedavg", rounds=10))]
+    res = sweep.run_sweep(MODEL, dyn_data, specs, seeds=(0,))
+    s = res.summary(window=4)
+    assert s["batt"]["min_battery"] is not None
+    assert s["batt"]["min_battery"] >= 0.0
+    assert s["plain"]["min_battery"] is None  # static sentinel -> JSON null
+    assert s["plain"]["avail_count"] == pytest.approx(float(N))
+    assert s["batt"]["avail_count"] <= N

@@ -1,0 +1,219 @@
+"""Property-test hardening of the core statistical invariants.
+
+Runs under the real ``hypothesis`` (CI) or the deterministic shim in
+``tests/_stubs`` (hermetic envs). The unmarked tests are the shim-backed
+fast-lane subset (small ``max_examples``); the ``slow``-marked sweeps rerun
+the same properties at nightly-lane depth.
+
+Invariants:
+  - λ stays on the probability simplex under ARBITRARY ascent inputs;
+  - round energy is zero for the empty mask, non-negative, and monotone in
+    the participant set (cumulative ledgers can never decrease);
+  - exact-K selection masks have exactly K ones even under tied scores
+    (regression for the old ``scores >= thresh`` over-selection);
+  - Gumbel-top-K inclusion frequencies match the Plackett-Luce inclusion
+    probabilities of the paper's Prop. 2 sampling law;
+  - an unavailable client is NEVER scheduled, by any method.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.dro import lambda_ascent
+from repro.core.energy import round_energy
+from repro.core.selection import gumbel_topk_mask, select_clients, topk_mask
+
+pytestmark = pytest.mark.property
+
+FINITE = st.floats(min_value=-50.0, max_value=50.0, allow_nan=False)
+POSITIVE = st.floats(min_value=0.05, max_value=10.0, allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# λ simplex invariance
+# ---------------------------------------------------------------------------
+
+
+def _check_lambda_simplex(lam_raw, losses, mask_bits, gamma):
+    lam = jnp.asarray(lam_raw)
+    mask = jnp.asarray(mask_bits, jnp.float32)
+    out = np.asarray(lambda_ascent(lam, jnp.asarray(losses), mask, gamma))
+    assert np.all(out >= -1e-6)
+    # f32 round-off in the projection scales with the pre-projection
+    # magnitude (γ·loss can reach thousands here): tolerance follows suit
+    scale = float(np.abs(np.asarray(lam_raw)).max()
+                  + gamma * np.abs(np.asarray(losses)).max())
+    np.testing.assert_allclose(out.sum(), 1.0,
+                               atol=max(1e-4, 3e-7 * scale * len(out)))
+
+
+@given(hnp.arrays(np.float32, (16,), elements=FINITE),
+       hnp.arrays(np.float32, (16,), elements=FINITE),
+       hnp.arrays(np.int32, (16,), elements=st.integers(0, 1)),
+       st.floats(min_value=0.0, max_value=5.0))
+@settings(max_examples=20, deadline=None)
+def test_lambda_stays_on_simplex(lam_raw, losses, mask_bits, gamma):
+    """Even from an off-simplex λ and adversarial (negative, huge) losses,
+    one ascent step lands exactly back on the simplex."""
+    _check_lambda_simplex(lam_raw, losses, mask_bits, gamma)
+
+
+@pytest.mark.slow
+@given(hnp.arrays(np.float32, st.integers(2, 200).map(lambda n: (n,)),
+                  elements=FINITE),
+       st.floats(min_value=0.0, max_value=100.0))
+@settings(max_examples=300, deadline=None)
+def test_lambda_stays_on_simplex_deep(losses, gamma):
+    n = len(losses)
+    rng = np.random.default_rng(n)
+    lam = rng.normal(size=n).astype(np.float32)
+    mask = (rng.random(n) > 0.5).astype(np.int32)
+    _check_lambda_simplex(lam, losses, mask, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Energy ledger monotonicity
+# ---------------------------------------------------------------------------
+
+
+def _check_energy(h, mask_bits):
+    h = jnp.asarray(h)
+    mask = jnp.asarray(mask_bits, jnp.float32)
+    e_empty = float(round_energy(h, jnp.zeros_like(mask), 100, 1e-3, 1e-3))
+    assert e_empty == 0.0
+    e = float(round_energy(h, mask, 100, 1e-3, 1e-3))
+    assert e >= 0.0
+    # adding one more participant never decreases the round energy
+    off = np.flatnonzero(np.asarray(mask_bits) == 0)
+    if len(off):
+        grown = mask.at[int(off[0])].set(1.0)
+        assert float(round_energy(h, grown, 100, 1e-3, 1e-3)) >= e
+
+
+@given(hnp.arrays(np.float32, (12,), elements=POSITIVE),
+       hnp.arrays(np.int32, (12,), elements=st.integers(0, 1)))
+@settings(max_examples=25, deadline=None)
+def test_energy_zero_empty_and_monotone_in_mask(h, mask_bits):
+    _check_energy(h, mask_bits)
+
+
+@pytest.mark.slow
+@given(hnp.arrays(np.float32, st.integers(2, 100).map(lambda n: (n,)),
+                  elements=POSITIVE))
+@settings(max_examples=300, deadline=None)
+def test_energy_monotone_deep(h):
+    rng = np.random.default_rng(len(h))
+    _check_energy(h, (rng.random(len(h)) > 0.5).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Exact-K selection under ties (regression: thresholding over-selected)
+# ---------------------------------------------------------------------------
+
+
+def test_topk_mask_exactly_k_with_tied_scores():
+    """Quantized/floor-clipped channels tie; the mask must still be exact-K."""
+    vals = jnp.array([1.0, 1.0, 1.0, 0.5, 0.25])
+    assert int(topk_mask(vals, 2).sum()) == 2      # 3-way tie at the top
+    assert int(topk_mask(jnp.full((7,), 0.05), 3).sum()) == 3  # all equal
+
+
+def test_gumbel_topk_exactly_k_with_tied_neg_inf_logits():
+    """-inf-masked logits produce tied -inf scores (gumbel cannot separate
+    them); the old >=-threshold mask selected ALL of them."""
+    logits = jnp.array([-jnp.inf, -jnp.inf, -jnp.inf, 0.0, 0.0])
+    mask = gumbel_topk_mask(jax.random.PRNGKey(0), logits, 4)
+    assert int(mask.sum()) == 4
+
+
+@given(st.integers(1, 11), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_exact_k_for_all_methods(k, seed):
+    key = jax.random.PRNGKey(seed)
+    n = 12
+    lam = jax.nn.softmax(jax.random.normal(key, (n,)))
+    # quantized channels: heavy ties by construction
+    h = jnp.round(jnp.exp(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (n,))) * 2) / 2 + 0.5
+    for method in ("fedavg", "afl", "ca_afl", "greedy"):
+        mask = select_clients(method, key, lam, h, k, C=4.0)
+        assert int(mask.sum()) == k, (method, k)
+
+
+# ---------------------------------------------------------------------------
+# Gumbel-top-K == Plackett-Luce inclusion probabilities (Prop. 2 law)
+# ---------------------------------------------------------------------------
+
+
+def _pl_inclusion_top2(p):
+    """P(i in top-2) under sequential renormalized sampling w/o replacement."""
+    p = np.asarray(p, np.float64)
+    first = p
+    second = np.array([
+        sum(p[j] * p[i] / (1.0 - p[j]) for j in range(len(p)) if j != i)
+        for i in range(len(p))])
+    return first + second
+
+
+def _check_gumbel_matches_pl(logits, draws, tol):
+    logits = jnp.asarray(logits)
+    p = np.asarray(jax.nn.softmax(logits))
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    masks = jax.vmap(lambda k: gumbel_topk_mask(k, logits, 2))(keys)
+    freq = np.asarray(masks.mean(0))
+    np.testing.assert_allclose(freq, _pl_inclusion_top2(p), atol=tol)
+
+
+@given(hnp.arrays(np.float32, (5,),
+                  elements=st.floats(-1.5, 1.5, allow_nan=False)))
+@settings(max_examples=5, deadline=None)
+def test_gumbel_topk_matches_plackett_luce(logits):
+    _check_gumbel_matches_pl(logits, draws=3000, tol=0.06)
+
+
+@pytest.mark.slow
+@given(hnp.arrays(np.float32, (6,),
+                  elements=st.floats(-2.5, 2.5, allow_nan=False)))
+@settings(max_examples=25, deadline=None)
+def test_gumbel_topk_matches_plackett_luce_deep(logits):
+    _check_gumbel_matches_pl(logits, draws=12000, tol=0.035)
+
+
+# ---------------------------------------------------------------------------
+# Availability: an unavailable client is never scheduled, by any method
+# ---------------------------------------------------------------------------
+
+
+def _check_never_scheduled(avail_bits, seed):
+    n = len(avail_bits)
+    key = jax.random.PRNGKey(seed)
+    avail = jnp.asarray(avail_bits, jnp.float32)
+    lam = jax.nn.softmax(jax.random.normal(key, (n,)))
+    h = jnp.exp(jax.random.normal(jax.random.fold_in(key, 1), (n,))) + 0.05
+    g = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,))) + 0.1
+    for method in ("fedavg", "afl", "ca_afl", "greedy", "gca"):
+        mask = select_clients(method, key, lam, h, 3, C=4.0, grad_norms=g,
+                              avail=avail)
+        viol = np.asarray(mask * (1.0 - avail))
+        assert not viol.any(), method
+        assert float(mask.sum()) <= max(float(avail.sum()), 3)
+
+
+@given(hnp.arrays(np.int32, (9,), elements=st.integers(0, 1)),
+       st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_unavailable_never_scheduled_any_method(avail_bits, seed):
+    """Holds for every availability pattern — including nobody available."""
+    _check_never_scheduled(avail_bits, seed)
+
+
+@pytest.mark.slow
+@given(hnp.arrays(np.int32, st.integers(3, 40).map(lambda n: (n,)),
+                  elements=st.integers(0, 1)),
+       st.integers(0, 10_000))
+@settings(max_examples=300, deadline=None)
+def test_unavailable_never_scheduled_deep(avail_bits, seed):
+    _check_never_scheduled(avail_bits, seed)

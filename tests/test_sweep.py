@@ -158,6 +158,34 @@ def test_gca_params_ride_the_sweep_axis(sweep_data):
     assert loose > tight  # lower threshold schedules more clients
 
 
+def test_dynamic_scenario_end_to_end_in_sweep(sweep_data):
+    """A temporal (battery-constrained Gauss-Markov) scenario runs through
+    ``expand_grid`` + ``run_sweep`` like any static one: one extra compile
+    for the dynamic structure, per-seed histories with live battery/
+    availability columns, and a sweep-vs-single-run match."""
+    battery = 1.2e-3  # binds within a few rounds at this model scale
+    specs = sweep.expand_grid(
+        _fl("ca_afl", rounds=10), variants={"ca_afl": {}},
+        scenarios=("default",
+                   ("battery_markov", {"temporal": True, "rho_fading": 0.8,
+                                       "battery_init": battery})))
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0, 1))
+    assert sweep.trace_count() == 2  # {static, temporal} structures
+    dyn = res.history("ca_afl@battery_markov")
+    assert bool(jnp.all(jnp.isfinite(dyn.avg_acc)))
+    mb = np.asarray(dyn.min_battery)
+    assert np.all(np.diff(mb, axis=1) <= 1e-9) and np.all(mb >= -1e-9)
+    assert np.all(np.asarray(dyn.energy)[:, -1] <= N * battery + 1e-6)
+    # the sweep cell equals the standalone simulator run of the same config
+    fl_dyn = dict(specs)["ca_afl@battery_markov"]
+    ref = run_simulation(MODEL, fl_dyn, sweep_data, seed=1)
+    np.testing.assert_allclose(np.asarray(dyn.avg_acc)[1],
+                               np.asarray(ref.avg_acc), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dyn.min_battery)[1],
+                               np.asarray(ref.min_battery), rtol=1e-5)
+
+
 def test_scenarios_change_outcomes_in_sweep(sweep_data):
     """Scenario knobs are live inside the jitted sweep: a 12 dB pathloss
     spread changes the energy ledger under uniform (fedavg) selection."""
