@@ -1,0 +1,145 @@
+"""Hot-path perf benchmark: dense [N, model] reference vs selected-K rounds.
+
+Measures, per cell (N × {dense, sparse, sparse+eval cadence}):
+
+  - compile seconds (AOT ``lower().compile()``)
+  - execution wall seconds and rounds/sec for a T-round jitted scan
+  - peak live bytes of the compiled executable (XLA memory analysis:
+    arguments + outputs + temporaries)
+
+and writes ``benchmarks/results/BENCH_perf.json`` — the artifact CI uploads
+per commit, with the headline ``speedup_n100`` = hot path (sparse gather +
+eval_every cadence) over the dense path at the paper's N=100, K=10. This PR
+is the baseline of the perf trajectory.
+
+`PYTHONPATH=src python -m benchmarks.perf_bench`
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.simulator import (init_sim_state, make_param_round_fn)
+from repro.core.sweep import sweep_point_from_config
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+from repro.utils.tree import tree_size
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+DIM = 784  # the paper's FMNIST logreg: M = 7850
+
+# (N, rounds): dense N=1000 pays 100x the sparse model work per round, so
+# its timing loop is kept short; the per-round rate is what we report.
+GRIDS = ((100, 40), (1000, 8))
+K = 10
+
+
+def _data(n):
+    per_train, per_test = 20, 5
+    x, y, xt, yt = make_fmnist_like(n * per_train, n * per_test, dim=DIM,
+                                    seed=0)
+    xs, ys = sorted_label_shards(x, y, n)
+    xts, yts = sorted_label_shards(xt, yt, n)
+    return xs, ys, xts, yts
+
+
+def bench_cell(model, fl, data, dense: bool):
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    round_fn = make_param_round_fn(model, fl, data, tree_size(state.w),
+                                   fl.method, dense=dense)
+
+    def run(point, state):
+        _, hist = jax.lax.scan(
+            lambda s, t: round_fn(point, s, t), state,
+            jnp.arange(fl.rounds))
+        return hist
+
+    t0 = time.perf_counter()
+    compiled = jax.jit(run).lower(point, state).compile()
+    compile_s = time.perf_counter() - t0
+
+    jax.block_until_ready(compiled(point, state))  # warm-up execution
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled(point, state))
+    exec_s = time.perf_counter() - t0
+
+    try:
+        ma = compiled.memory_analysis()
+        peak_bytes = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes)
+    except Exception:  # backend without memory stats
+        peak_bytes = None
+    return {
+        "compile_seconds": compile_s,
+        "exec_seconds": exec_s,
+        "rounds_per_second": fl.rounds / exec_s,
+        "peak_live_bytes": peak_bytes,
+    }
+
+
+def main():
+    model = logistic_regression(DIM, 10)
+    payload = {
+        "bench": "perf_bench",
+        "model": f"logreg dim={DIM} (M={DIM * 10 + 10})",
+        "clients_per_round": K,
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "device": jax.devices()[0].platform,
+        "cells": {},
+    }
+    for n, rounds in GRIDS:
+        data = _data(n)
+        fl = FLConfig(num_clients=n, clients_per_round=K, rounds=rounds,
+                      batch_size=50, method="ca_afl")
+        cells = {
+            "dense": bench_cell(model, fl, data, dense=True),
+            "sparse": bench_cell(model, fl, data, dense=False),
+            # the full hot path: sparse gather + eval cadence
+            "sparse_eval10": bench_cell(
+                model, FLConfig(**{**fl.__dict__, "eval_every": 10}), data,
+                dense=False),
+        }
+        for name, row in cells.items():
+            print(f"[perf_bench] N={n:5d} {name:13s} "
+                  f"{row['rounds_per_second']:8.2f} rounds/s  "
+                  f"compile {row['compile_seconds']:.2f}s  "
+                  f"peak {row['peak_live_bytes'] or 0:>12,} B")
+        cells["speedup_sparse"] = (cells["sparse"]["rounds_per_second"]
+                                   / cells["dense"]["rounds_per_second"])
+        cells["speedup_hot_path"] = (
+            cells["sparse_eval10"]["rounds_per_second"]
+            / cells["dense"]["rounds_per_second"])
+        payload["cells"][f"n{n}"] = cells
+        print(f"[perf_bench] N={n}: sparse {cells['speedup_sparse']:.1f}x, "
+              f"hot path {cells['speedup_hot_path']:.1f}x over dense")
+
+    payload["speedup_n100"] = payload["cells"]["n100"]["speedup_hot_path"]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_perf.json"
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[perf_bench] wrote {out} (speedup_n100="
+          f"{payload['speedup_n100']:.2f}x)")
+    # acceptance floor: the hot path must stay >= 3x the dense reference at
+    # the paper's N=100, K=10 — fail the CI job on a perf regression, don't
+    # just record it
+    if payload["speedup_n100"] < 3.0:
+        raise SystemExit(
+            f"hot-path regression: speedup_n100 = "
+            f"{payload['speedup_n100']:.2f}x < 3x acceptance floor")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -129,6 +129,12 @@ class FLConfig:
     ascent_lr: float = 8e-3         # gamma
     energy_C: float = 8.0           # energy-conservation tuning factor C
     local_steps: int = 1
+    # Full N-client test-set eval cadence (STRUCTURAL: joins the sweep
+    # compilation-group signature). 1 = the paper's per-round eval; E > 1
+    # evaluates every E-th round and forward-fills the accuracy metrics in
+    # between, so the O(N · test-set) eval stops dominating long runs where
+    # only the selected K clients do model-sized descent work per round.
+    eval_every: int = 1
     # channel / physical layer
     num_subcarriers: int = 64       # N_sc
     flat_fading: bool = True        # paper §IV-A: flat-fading channel block

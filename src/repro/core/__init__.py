@@ -9,8 +9,10 @@ from repro.core.dynamics import (ChannelProcess, ChanState, commit_process,
                                  step_process)
 from repro.core.energy import transmit_energy, round_energy
 from repro.core.poe import energy_expert_pmf, product_of_experts, ca_afl_pmf
-from repro.core.selection import select_clients, gumbel_topk_mask
+from repro.core.selection import (EXACT_K_METHODS, select_clients,
+                                  select_clients_sparse, gumbel_topk_mask)
 from repro.core.dro import project_simplex, lambda_ascent
-from repro.core.aircomp import aircomp_aggregate, aircomp_aggregate_tree
+from repro.core.aircomp import (aircomp_aggregate, aircomp_aggregate_tree,
+                                aircomp_aggregate_stack_tree)
 from repro.core.sweep import (SweepPoint, SweepResult, expand_grid, run_sweep,
                               sweep_point_from_config)

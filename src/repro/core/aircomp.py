@@ -8,14 +8,27 @@ sum of the K transmitted models plus receiver noise:
 
 On TPU the multiple-access superposition maps onto the ICI all-reduce; the
 AWGN z is injected from a PRNG key to preserve the algorithm's statistics
-(DESIGN.md §2). Both a stacked-tensor form (simulator tier) and a pytree form
-(production tier) are provided. The Pallas kernel in
-``repro.kernels.aircomp`` implements the fused stacked form for TPU.
+(DESIGN.md §2).
+
+Two implementations:
+
+  - :func:`aircomp_aggregate_tree` — the per-leaf REFERENCE path (one masked
+    sum + noise draw per pytree leaf, per-leaf key splits). The dense
+    simulator path and the differential tests pin against it.
+  - :func:`aircomp_aggregate_stack_tree` — the fused hot path: the [K, ...]
+    stacked pytree is raveled once into a single contiguous [K, P] buffer and
+    the whole eq. (10) (weighted sum + AWGN + 1/K) is one fused pass over it,
+    dispatched to the Pallas kernel (``repro.kernels.aircomp``) on TPU and a
+    fused jnp einsum elsewhere. The AWGN is drawn with the SAME per-leaf key
+    discipline as the reference path, so the two paths inject bit-identical
+    noise and differ only in summation order.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.aircomp.ops import aircomp_aggregate_flat
 
 
 def aircomp_aggregate(
@@ -42,7 +55,13 @@ def aircomp_aggregate(
 
 
 def aircomp_aggregate_tree(trees, mask, key, noise_std: float = 0.0, k=None):
-    """Pytree form: `trees` has leading client axis N on every leaf."""
+    """Pytree form: `trees` has leading client axis N on every leaf.
+
+    The per-leaf reference implementation: one masked sum and one noise draw
+    per leaf, with a per-leaf key split. Kept as the oracle the fused
+    flat-buffer path (:func:`aircomp_aggregate_stack_tree`) is pinned
+    against.
+    """
     if k is None:
         k = jnp.sum(mask)
     leaves, treedef = jax.tree_util.tree_flatten(trees)
@@ -50,4 +69,57 @@ def aircomp_aggregate_tree(trees, mask, key, noise_std: float = 0.0, k=None):
     out = []
     for leaf, kk in zip(leaves, keys):
         out.append(aircomp_aggregate(leaf, mask, kk, noise_std, k))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def flat_awgn(key, leaves) -> jnp.ndarray:
+    """Receiver-noise vector z [P] for a flat model buffer.
+
+    Drawn leaf-by-leaf with exactly the key discipline of
+    :func:`aircomp_aggregate_tree` (split ``key`` into one subkey per leaf,
+    normal of the leaf's per-client shape/dtype), then raveled — so the
+    fused path injects bit-identical noise to the per-leaf reference and
+    differential tests only see summation-order differences.
+
+    ``leaves``: the flattened leaves of the STACKED tree (leading client
+    axis); the noise shape is each leaf's shape without that axis.
+    """
+    keys = jax.random.split(key, len(leaves))
+    return jnp.concatenate([
+        jax.random.normal(kk, leaf.shape[1:], leaf.dtype)
+        .reshape(-1).astype(jnp.float32)
+        for leaf, kk in zip(leaves, keys)
+    ])
+
+
+def aircomp_aggregate_stack_tree(trees, weights, key, noise_std=0.0, k=None,
+                                 use_pallas: bool | None = None):
+    """Fused flat-buffer eq. (10) over a stacked pytree (the hot path).
+
+    ``trees``: pytree with a leading client/slot axis (size K on the sparse
+    hot path, N on dense callers) on every leaf; ``weights`` [K]: per-slot
+    mask/gain entries (0 for availability/battery-gated slots). The stack is
+    raveled ONCE into a contiguous [K, P] buffer and the whole masked-sum +
+    AWGN + 1/K pass runs fused over it — the Pallas kernel on TPU, a jnp
+    einsum elsewhere (see ``repro.kernels.aircomp.ops``).
+    """
+    if k is None:
+        k = jnp.sum(weights)
+    leaves, treedef = jax.tree_util.tree_flatten(trees)
+    kk = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.reshape(kk, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+    if isinstance(noise_std, (int, float)) and noise_std == 0:
+        # statically noise-free: skip the model-sized Gaussian draw entirely
+        z = jnp.zeros((flat.shape[1],), jnp.float32)
+    else:
+        z = flat_awgn(key, leaves)
+    agg = aircomp_aggregate_flat(flat, weights, z, noise_std=noise_std, k=k,
+                                 use_pallas=use_pallas)
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(leaf[0].size)
+        out.append(agg[off:off + size].reshape(leaf.shape[1:])
+                   .astype(leaf.dtype))
+        off += size
     return jax.tree_util.tree_unflatten(treedef, out)

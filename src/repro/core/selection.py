@@ -31,14 +31,35 @@ import jax.numpy as jnp
 from repro.configs.base import GCAParams
 from repro.core.poe import ca_afl_logits
 
-__all__ = ["GCAParams", "availability_logits", "gumbel_topk_mask",
-           "topk_mask", "select_clients"]
+__all__ = ["GCAParams", "EXACT_K_METHODS", "availability_logits",
+           "gumbel_topk_mask", "gumbel_topk", "topk_mask", "select_clients",
+           "select_clients_sparse"]
+
+# Methods whose scheduled set is bounded by a static K (lax.top_k over a
+# score vector). These — and only these — can ride the simulator's sparse
+# gather-compute-scatter hot path (see ROADMAP "hot-path contract"): their
+# top-k *indices* are static-shape [K], so per-round model work gathers the
+# K selected clients instead of masking all N. GCA's thresholding yields an
+# unbounded scheduled count (can exceed clients_per_round), so it stays on
+# the dense reference path.
+EXACT_K_METHODS = ("fedavg", "afl", "ca_afl", "greedy")
+
+
+def _exact_k(scores: jnp.ndarray, k: int):
+    """(mask, idx) of the top-k scores — exactly k ones, ties broken by index.
+
+    ``idx`` is the raw ``lax.top_k`` index vector (static shape [k], sorted by
+    descending score) the sparse hot path gathers with; the mask is its
+    scatter. Deriving both from ONE top_k keeps them consistent by
+    construction.
+    """
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros(scores.shape, jnp.float32).at[idx].set(1.0), idx
 
 
 def _exact_k_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
     """0/1 mask of the top-k scores — exactly k ones, ties broken by index."""
-    _, idx = jax.lax.top_k(scores, k)
-    return jnp.zeros(scores.shape, jnp.float32).at[idx].set(1.0)
+    return _exact_k(scores, k)[0]
 
 
 def availability_logits(avail: Optional[jnp.ndarray]) -> jnp.ndarray | float:
@@ -48,10 +69,15 @@ def availability_logits(avail: Optional[jnp.ndarray]) -> jnp.ndarray | float:
     return jnp.where(avail > 0, 0.0, -jnp.inf)
 
 
+def gumbel_topk(key, logits: jnp.ndarray, k: int):
+    """Sample k items w/o replacement from softmax(logits); (mask, idx)."""
+    g = jax.random.gumbel(key, logits.shape)
+    return _exact_k(logits + g, k)
+
+
 def gumbel_topk_mask(key, logits: jnp.ndarray, k: int) -> jnp.ndarray:
     """Sample k items w/o replacement from softmax(logits); return 0/1 mask [N]."""
-    g = jax.random.gumbel(key, logits.shape)
-    return _exact_k_mask(logits + g, k)
+    return gumbel_topk(key, logits, k)[0]
 
 
 def topk_mask(values: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -75,23 +101,12 @@ def select_clients(
     masked-out clients are never selected. When fewer than ``k`` clients are
     available, exact-K methods schedule only the available ones.
     """
-    n = lam.shape[0]
-    a_logits = availability_logits(avail)
-
     def gate(mask):
         return mask if avail is None else mask * avail
 
-    if method == "fedavg":
-        return gate(gumbel_topk_mask(key, jnp.zeros((n,)) + a_logits, k))
-    if method == "afl":
-        return gate(gumbel_topk_mask(
-            key, jnp.log(jnp.clip(lam, 1e-38)) + a_logits, k))
-    if method == "ca_afl":
-        return gate(gumbel_topk_mask(
-            key, ca_afl_logits(lam, h_eff, C) + a_logits, k))
-    if method == "greedy":
-        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel.
-        return gate(topk_mask(h_eff + a_logits, k))
+    if method in EXACT_K_METHODS:
+        return select_clients_sparse(method, key, lam, h_eff, k, C=C,
+                                     avail=avail)[0]
     if method == "gca":
         if grad_norms is None:
             raise ValueError("GCA requires per-client gradient norms")
@@ -124,3 +139,45 @@ def select_clients(
         )
         return gate((indicator > thr).astype(jnp.float32))
     raise ValueError(f"unknown selection method {method!r}")
+
+
+def select_clients_sparse(
+    method: str,
+    key,
+    lam: jnp.ndarray,
+    h_eff: jnp.ndarray,
+    k: int,
+    C: float = 0.0,
+    avail: Optional[jnp.ndarray] = None,
+):
+    """Exact-K selection returning ``(mask [N], idx [K])``.
+
+    ``idx`` is the single ``lax.top_k`` index vector the masks were always
+    built from — returned instead of re-derived so the simulator's hot path
+    can gather the K selected clients' shards/batches and never materialize
+    [N, model] work. The mask is the scatter of ``idx`` (times ``avail``):
+    under availability/battery gating some of the K slots carry weight 0
+    (``mask[idx]``), which is how variable-K rounds stay a static-shape
+    program — zero-weight slots compute and contribute nothing to eq. (10).
+
+    Only :data:`EXACT_K_METHODS` qualify; GCA's thresholded count is
+    unbounded by ``k`` and must use the dense :func:`select_clients` path.
+    """
+    n = lam.shape[0]
+    a_logits = availability_logits(avail)
+    if method == "fedavg":
+        mask, idx = gumbel_topk(key, jnp.zeros((n,)) + a_logits, k)
+    elif method == "afl":
+        mask, idx = gumbel_topk(
+            key, jnp.log(jnp.clip(lam, 1e-38)) + a_logits, k)
+    elif method == "ca_afl":
+        mask, idx = gumbel_topk(key, ca_afl_logits(lam, h_eff, C) + a_logits, k)
+    elif method == "greedy":
+        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel.
+        mask, idx = _exact_k(h_eff + a_logits, k)
+    else:
+        raise ValueError(
+            f"sparse selection needs a static-K method, got {method!r}")
+    if avail is not None:
+        mask = mask * avail
+    return mask, idx

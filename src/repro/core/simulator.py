@@ -1,17 +1,35 @@
 """Fully-jitted FL simulator at the paper's native scale (Algorithm 1).
 
-The entire T-round run is a single ``lax.scan``; per-client work is ``vmap``'d
-over the stacked client shards, so one simulation of (N=100, T=500, logreg)
-runs in seconds on CPU and the five-seed average of the paper is a ``vmap``
-over keys.
+The entire T-round run is a single ``lax.scan``; the per-round body is
+factored as ``round_fn(point, state, t)`` where ``point`` is a
+:class:`repro.core.sweep.SweepPoint` pytree of *traced* knobs (learning
+rates, energy_C, GCA params, channel scenario). ``run_simulation`` binds one
+point and scans; the sweep engine (``repro.core.sweep``) instead ``vmap``s
+the same body over a whole stacked grid of points × seeds under a single
+compilation.
 
-The per-round body is factored as ``round_fn(point, state, t)`` where
-``point`` is a :class:`repro.core.sweep.SweepPoint` pytree of *traced* knobs
-(learning rates, energy_C, GCA params, channel scenario). ``run_simulation``
-binds one point and scans; the sweep engine (``repro.core.sweep``) instead
-``vmap``s the same body over a whole stacked grid of points × seeds under a
-single compilation — which is how a five-seed × four-method paper comparison
-drops from ~20 compilations to one per selection method.
+Hot-path contract (see ROADMAP): per-round *model-sized* work scales with
+the scheduled set K, not the population N. For exact-K selection methods
+(``selection.EXACT_K_METHODS``) the round is gather-compute-scatter:
+
+  1. selection returns the ``lax.top_k`` *indices* [K] alongside the mask
+     (``select_clients_sparse``) — availability/battery-gated slots keep
+     their index but carry weight 0, so variable-K rounds stay one
+     static-shape program;
+  2. the K selected clients' batches are gathered and ``local_update`` runs
+     on a [K, ...] stack — the [N, model] weight stack is never built;
+  3. eq. (10) is one fused pass over the raveled [K, P] flat buffer
+     (``aircomp.aircomp_aggregate_stack_tree``: Pallas on TPU, fused jnp
+     elsewhere), and the ascent-side losses are evaluated only at the
+     ascent + descent slots and scattered back to [N].
+
+GCA's thresholded scheduled count is unbounded by K, so it stays on the
+dense [N, model] path — which is also kept (``dense=True``) as the reference
+implementation the differential tests pin the sparse path against. The full
+N-client test-set eval runs every ``fl.eval_every`` rounds (structural knob;
+metrics forward-fill in between). All key consumption is identical across
+the sparse/dense/GCA paths, so masks, channels, λ and energy agree
+bit-for-bit and model trajectories agree to summation-order.
 
 Faithfulness notes:
   - Descent (Alg. 1 lines 3-9): K clients sampled from ρ^(t) (eq. 9) w/o
@@ -32,14 +50,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.aircomp import aircomp_aggregate_tree
+from repro.core.aircomp import (aircomp_aggregate_stack_tree,
+                                aircomp_aggregate_tree)
 from repro.core.channel import draw_channels_scenario, effective_channel
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  process_from_config, step_process)
 from repro.core.energy import round_energy
-from repro.core.selection import (availability_logits, gumbel_topk_mask,
-                                  select_clients)
+from repro.core.selection import (EXACT_K_METHODS, availability_logits,
+                                  gumbel_topk, select_clients,
+                                  select_clients_sparse)
 from repro.models.logreg import SimModel
 from repro.utils.tree import tree_size
 
@@ -53,6 +73,10 @@ class SimState(NamedTuple):
     # for static scenarios — a leaf-less slot, so the i.i.d. program (and the
     # scan carry XLA sees) is exactly PR 1's.
     chan_state: Any = ()
+    # [3] last computed (avg, worst, std) test accuracy when eval_every > 1
+    # (forward-filled between evals); the leaf-less () when eval_every == 1,
+    # so the per-round-eval program is carried unchanged.
+    eval_cache: Any = ()
 
 
 class SimHistory(NamedTuple):
@@ -67,23 +91,49 @@ class SimHistory(NamedTuple):
     min_battery: jnp.ndarray  # [T] min remaining Joules (inf when static)
 
 
+def _batch_indices(key, n, shard_size, batch_size):
+    """The [N, B] in-shard sample indices — the ONLY randomness of batch
+    sampling, drawn for all N clients on every path (it is O(N·B) int32s)
+    so sparse and dense rounds consume ``k_batch`` identically."""
+    return jax.random.randint(key, (n, batch_size), 0, shard_size)
+
+
 def _sample_batches(key, x, y, batch_size):
     """Sample one batch per client from stacked shards [N, S, ...]."""
     n, s = y.shape
-    idx = jax.random.randint(key, (n, batch_size), 0, s)
+    idx = _batch_indices(key, n, s, batch_size)
     xb = jax.vmap(lambda xc, ic: xc[ic])(x, idx)
     yb = jax.vmap(lambda yc, ic: yc[ic])(y, idx)
     return xb, yb
 
 
+def _gather_batches(x, y, cidx, bidx):
+    """Batches of the selected clients only: [K, B, ...].
+
+    ``cidx`` [K] client indices; ``bidx`` [K, B] in-shard sample indices
+    (the selected rows of :func:`_batch_indices`' draw). Composed into one
+    flat gather so no [K, shard] intermediate is materialized.
+    """
+    n, s = y.shape
+    flat = cidx[:, None] * s + bidx                       # [K, B]
+    xb = jnp.reshape(jnp.asarray(x), (n * s,) + x.shape[2:])[flat]
+    yb = jnp.reshape(jnp.asarray(y), (n * s,))[flat]
+    return xb, yb
+
+
 def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
-                        method: str, noise_free: bool | None = None):
+                        method: str, noise_free: bool | None = None,
+                        dense: bool = False):
     """Build ``round_fn(point, state, t)``.
 
     Everything structural (N, K, T, batch/local-step counts, subcarriers,
-    flat-vs-selective fading, selection *method*) comes statically from
-    ``fl``/``method``; every scalar knob that may ride a sweep axis comes
-    traced from ``point`` (see ``repro.core.sweep.SweepPoint``).
+    flat-vs-selective fading, selection *method*, ``eval_every``) comes
+    statically from ``fl``/``method``; every scalar knob that may ride a
+    sweep axis comes traced from ``point`` (see ``repro.core.sweep``).
+
+    ``dense=True`` forces the [N, model] reference path for exact-K methods
+    (GCA always uses it) — the oracle the sparse gather path is pinned
+    against by ``tests/test_hotpath.py``.
 
     ``noise_free=True`` statically elides the receiver-noise draw of eq. (10)
     (adding z with std 0 is the identity, but the Gaussian sample itself is
@@ -93,8 +143,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
     """
     x, y, x_test, y_test = data
     n = fl.num_clients
+    shard = y.shape[1]
     if noise_free is None:
         noise_free = fl.noise_std == 0
+    sparse = (method in EXACT_K_METHODS) and not dense
     grad_fn = jax.grad(model.loss)
     vloss = jax.vmap(model.loss, in_axes=(None, 0, 0))
     vacc = jax.vmap(model.accuracy, in_axes=(None, 0, 0))
@@ -108,6 +160,16 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             return jax.tree.map(lambda p, gg: p - eta * gg, wc, g), None
 
         wc, _ = jax.lax.scan(body, w, None, length=fl.local_steps)
+        return wc
+
+    def local_update_rest(w1, eta, xb, yb):
+        """Steps 2..local_steps when step 1's gradient was precomputed."""
+
+        def body(wc, _):
+            g = grad_fn(wc, xb, yb)
+            return jax.tree.map(lambda p, gg: p - eta * gg, wc, g), None
+
+        wc, _ = jax.lax.scan(body, w1, None, length=fl.local_steps - 1)
         return wc
 
     temporal = fl.temporal
@@ -135,9 +197,16 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             avail = eligible = None
 
         # ---- client selection (descent set D^(t))
+        sel_idx = None
         if method == "gca":
-            xb0, yb0 = _sample_batches(k_batch, x, y, fl.batch_size)
-            grads0 = vgrad_clients(state.w, xb0, yb0)
+            # ONE batch draw: the probe batch IS the descent batch by design
+            # — GCA's gradient probe doubles as the first descent step, so
+            # grads0 is reused as SGD step 1 below instead of being
+            # recomputed inside local_update (the former double-work bug:
+            # two identical _sample_batches(k_batch, ...) draws feeding two
+            # identical per-client gradient computations).
+            xb, yb = _sample_batches(k_batch, x, y, fl.batch_size)
+            grads0 = vgrad_clients(state.w, xb, yb)
             gnorms = jax.vmap(
                 lambda g: jnp.sqrt(
                     sum(jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(g))
@@ -146,6 +215,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             mask = select_clients("gca", k_sel, state.lam, h, fl.clients_per_round,
                                   grad_norms=gnorms, gca=point.gca,
                                   avail=eligible)
+        elif sparse:
+            mask, sel_idx = select_clients_sparse(
+                method, k_sel, state.lam, h, fl.clients_per_round,
+                C=point.energy_C, avail=eligible)
         else:
             mask = select_clients(method, k_sel, state.lam, h,
                                   fl.clients_per_round, C=point.energy_C,
@@ -156,15 +229,36 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         # degenerate-temporal programs do this arithmetic identically.
         k_denom = jnp.maximum(jnp.sum(mask), 1.0)
 
-        # ---- local updates (vmap over all N; only selected enter the sum)
+        # ---- local updates + AirComp aggregation (eq. 10)
         eta = point.lr0 * (point.lr_decay ** t)
-        xb, yb = _sample_batches(k_batch, x, y, fl.batch_size)
-        w_stack = jax.vmap(local_update, in_axes=(None, None, 0, 0))(state.w, eta, xb, yb)
-
-        # ---- AirComp aggregation (eq. 10)
         noise_std = 0.0 if noise_free else scen.noise_std
-        w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
-                                       k_denom)
+        if method == "gca":
+            # SGD step 1 reuses the probe gradients (same batch, same w)
+            w1 = jax.vmap(
+                lambda g: jax.tree.map(lambda p, gg: p - eta * gg, state.w, g)
+            )(grads0)
+            if fl.local_steps > 1:
+                w_stack = jax.vmap(local_update_rest,
+                                   in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
+            else:
+                w_stack = w1
+            w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
+                                           k_denom)
+        elif sparse:
+            # gather-compute-scatter: only the K selected clients descend
+            bidx = _batch_indices(k_batch, n, shard, fl.batch_size)
+            xb_s, yb_s = _gather_batches(x, y, sel_idx, bidx[sel_idx])
+            w_sel = jax.vmap(local_update,
+                             in_axes=(None, None, 0, 0))(state.w, eta, xb_s, yb_s)
+            sel_w = mask[sel_idx]  # 0 for availability/battery-gated slots
+            w_new = aircomp_aggregate_stack_tree(w_sel, sel_w, k_noise,
+                                                 noise_std, k_denom)
+        else:
+            xb, yb = _sample_batches(k_batch, x, y, fl.batch_size)
+            w_stack = jax.vmap(local_update,
+                               in_axes=(None, None, 0, 0))(state.w, eta, xb, yb)
+            w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
+                                           k_denom)
         if temporal or method == "gca":
             # the scheduled set can be EMPTY (battery/availability gating, or
             # GCA's thresholding): the PS then receives nothing over the air
@@ -191,22 +285,48 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
 
         # ---- ascent step on lambda (uniform K of the AVAILABLE clients,
         # control channel — no transmit energy, so no battery gating)
-        amask = gumbel_topk_mask(
+        amask, asc_idx = gumbel_topk(
             k_asel, jnp.zeros((n,)) + availability_logits(avail),
             fl.clients_per_round)
         if temporal:
             amask = amask * avail
-        xab, yab = _sample_batches(k_abatch, x, y, fl.batch_size)
-        losses = vloss(w_new, xab, yab)
+        if sparse:
+            # loss forwards only where they are consumed: the ascent slots
+            # (λ update) and the descent slots (selected-set loss metric),
+            # scattered back to [N] — identical values to the dense path,
+            # which evaluates all N and masks.
+            abidx = _batch_indices(k_abatch, n, shard, fl.batch_size)
+            xa, ya = _gather_batches(x, y, asc_idx, abidx[asc_idx])
+            asc_losses = vloss(w_new, xa, ya)
+            losses = jnp.zeros((n,), asc_losses.dtype).at[asc_idx].set(asc_losses)
+            xd, yd = _gather_batches(x, y, sel_idx, abidx[sel_idx])
+            sel_loss = jnp.sum(mask[sel_idx] * vloss(w_new, xd, yd)) / k_denom
+        else:
+            xab, yab = _sample_batches(k_abatch, x, y, fl.batch_size)
+            losses = vloss(w_new, xab, yab)
+            sel_loss = jnp.sum(mask * losses) / k_denom
         lam_new = lambda_ascent(state.lam, losses, amask, point.ascent_lr)
 
-        # ---- metrics
-        accs = vacc(w_new, x_test, y_test)
-        sel_loss = jnp.sum(mask * losses) / k_denom
+        # ---- metrics: the full N-client test-set eval runs on the
+        # eval_every cadence (forward-filled in between); everything else is
+        # O(N) scalars and stays per-round.
+        if fl.eval_every == 1:
+            accs = vacc(w_new, x_test, y_test)
+            stats = jnp.stack([jnp.mean(accs), jnp.min(accs), jnp.std(accs)])
+            eval_cache = state.eval_cache  # the leaf-less ()
+        else:
+            def fresh_eval(_):
+                accs = vacc(w_new, x_test, y_test)
+                return jnp.stack([jnp.mean(accs), jnp.min(accs),
+                                  jnp.std(accs)])
+
+            stats = jax.lax.cond(t % fl.eval_every == 0, fresh_eval,
+                                 lambda _: state.eval_cache, None)
+            eval_cache = stats
         metrics = SimHistory(
-            avg_acc=jnp.mean(accs),
-            worst_acc=jnp.min(accs),
-            std_acc=jnp.std(accs),
+            avg_acc=stats[0],
+            worst_acc=stats[1],
+            std_acc=stats[2],
             energy=energy,
             loss=sel_loss,
             num_scheduled=jnp.sum(mask),
@@ -214,7 +334,8 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             avail_count=avail_count,
             min_battery=min_battery,
         )
-        return SimState(w_new, lam_new, energy, key, chan_state), metrics
+        return SimState(w_new, lam_new, energy, key, chan_state,
+                        eval_cache), metrics
 
     return round_fn
 
@@ -245,12 +366,16 @@ def init_sim_state(model: SimModel, fl: FLConfig, key,
         chan_state = init_chan_state(
             process, jax.random.fold_in(k_init, 1), fl.num_clients,
             fl.num_subcarriers, fl.flat_fading)
+    # round 0 always evaluates (0 % eval_every == 0), so the zeros are never
+    # read — the slot just keeps the carry static-shape
+    eval_cache = () if fl.eval_every == 1 else jnp.zeros((3,), jnp.float32)
     return SimState(
         w=w0,
         lam=jnp.full((fl.num_clients,), 1.0 / fl.num_clients),
         energy=jnp.zeros(()),
         key=k_run,
         chan_state=chan_state,
+        eval_cache=eval_cache,
     )
 
 
@@ -259,8 +384,13 @@ def run_simulation(
     fl: FLConfig,
     data,
     seed: Optional[int] = None,
+    dense: bool = False,
 ) -> SimHistory:
-    """Run T rounds of Algorithm 1 (or a baseline, per fl.method)."""
+    """Run T rounds of Algorithm 1 (or a baseline, per fl.method).
+
+    ``dense=True`` forces the [N, model] reference path (differential tests
+    and benchmarks; exact-K methods default to the sparse gather path).
+    """
     from repro.core.sweep import sweep_point_from_config  # local: avoid cycle
 
     seed = fl.seed if seed is None else seed
@@ -268,7 +398,8 @@ def run_simulation(
     state = init_sim_state(model, fl, jax.random.PRNGKey(seed),
                            process=point.process)
     model_size = tree_size(state.w)
-    round_fn = make_param_round_fn(model, fl, data, model_size, fl.method)
+    round_fn = make_param_round_fn(model, fl, data, model_size, fl.method,
+                                   dense=dense)
 
     @jax.jit
     def run(point, state):

@@ -103,10 +103,13 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
 # program, so specs are grouped by this signature (one compile per group).
 # `temporal` switches the stateless draw for the ChannelProcess carry
 # (core/dynamics.py): all dynamic scenarios share one group per method, and
-# the i.i.d. default keeps compiling to exactly PR 1's program.
+# the i.i.d. default keeps compiling to exactly PR 1's program. `eval_every`
+# changes the metrics sub-program (per-round eval vs cond-gated cadence +
+# eval_cache carry), so cells with different cadences cannot share an
+# executable — cells with the SAME cadence still do.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
-    "num_subcarriers", "flat_fading", "temporal", "method",
+    "num_subcarriers", "flat_fading", "temporal", "eval_every", "method",
 )
 
 
@@ -179,28 +182,43 @@ def _stack_points(points: Sequence[SweepPoint]) -> SweepPoint:
 
 def _build_runner(model, fl_static: FLConfig, data, method: str,
                   noise_free: bool, model_size: int):
-    """One jitted executable: (stacked points [S], seeds [R]) -> SimHistory
-    with leading [S, R] axes on every leaf."""
+    """Two jitted executables: an initializer ``(points [S], seeds [R]) ->
+    SimState`` stack with leading [S, R] axes, and the runner ``(points,
+    states) -> (final states, SimHistory)``.
+
+    The initial-state stack is built OUTSIDE the runner and donated into it
+    (``donate_argnums``): the scan carry then reuses the caller's buffers
+    in-place instead of holding both generations of [S, R, model] state live
+    — returning the final states (same shapes) is what gives XLA the
+    input→output aliasing that makes the donation effective (and warning-
+    free, which ``tests/test_sweep.py`` asserts).
+    """
     round_fn = make_param_round_fn(model, fl_static, data, model_size, method,
                                    noise_free=noise_free)
 
-    def run_one(point, seed):
+    def init_one(point, seed):
         # the point's process carries the traced battery_init for ChanState
-        state = init_sim_state(model, fl_static, jax.random.PRNGKey(seed),
-                               process=point.process)
-        _, hist = jax.lax.scan(
+        return init_sim_state(model, fl_static, jax.random.PRNGKey(seed),
+                              process=point.process)
+
+    def init_batched(points, seeds):
+        over_seeds = jax.vmap(init_one, in_axes=(None, 0))
+        return jax.vmap(over_seeds, in_axes=(0, None))(points, seeds)
+
+    def run_one(point, state):
+        final, hist = jax.lax.scan(
             lambda s, t: round_fn(point, s, t), state,
             jnp.arange(fl_static.rounds))
-        return hist
+        return final, hist
 
-    def batched(points, seeds):
+    def batched(points, states):
         # Python side effect: runs once per *compilation* (trace), never on
         # cached executions — this is the compile counter the tests assert on.
         _TRACE_LOG.append(method)
         over_seeds = jax.vmap(run_one, in_axes=(None, 0))
-        return jax.vmap(over_seeds, in_axes=(0, None))(points, seeds)
+        return jax.vmap(over_seeds, in_axes=(0, 0))(points, states)
 
-    return jax.jit(batched)
+    return jax.jit(init_batched), jax.jit(batched, donate_argnums=(1,))
 
 
 def run_sweep(
@@ -232,9 +250,12 @@ def run_sweep(
             [sweep_point_from_config(specs[i][1]) for i in idxs])
         # elide the eq.-(10) noise draw only if the whole group is noise-free
         noise_free = all(specs[i][1].noise_std == 0 for i in idxs)
-        runner = _build_runner(model, fl0, data, fl0.method, noise_free,
-                               model_size)
-        hist = runner(points, seeds_arr)  # leaves [S_group, R, T, ...]
+        init_fn, runner = _build_runner(model, fl0, data, fl0.method,
+                                        noise_free, model_size)
+        states = init_fn(points, seeds_arr)  # leaves [S_group, R, ...]
+        # final states are discarded; returning them is what lets XLA alias
+        # the donated inputs (see _build_runner)
+        _, hist = runner(points, states)  # hist leaves [S_group, R, T, ...]
         for s, i in enumerate(idxs):
             histories[i] = jax.tree.map(lambda x: x[s], hist)
 

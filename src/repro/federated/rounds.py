@@ -36,7 +36,7 @@ class FLRoundMetrics(NamedTuple):
 
 def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
                   noise_std: float = 0.0, ctx=None, microbatches: int = 1,
-                  fused_probe: bool = False):
+                  fused_probe: bool = False, gather_k: bool = False):
     """Returns round_fn(params, opt_state, batch, mask, key) -> (params,
     opt_state, FLRoundMetrics).
 
@@ -46,6 +46,19 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
     factor at no recompute cost (each client's rows must be contiguous so
     every slice still covers all clients).
 
+    ``gather_k=True`` builds the selected-K gather round instead (the
+    production-tier leg of the simulator's hot-path contract):
+    ``round_fn(params, opt_state, batch, mask, idx, key)`` takes the
+    ``lax.top_k`` index vector [K] from
+    ``selection.select_clients_sparse`` and computes the descent
+    forward+backward on ONLY the K selected clients' example blocks — the
+    same weighted-mean normalization, so the update equals the dense round
+    to summation order, at K/N of its cost. Requires the canonical batch
+    layout (block j = client j's B/N contiguous examples; the server
+    verifies host-side and falls back to the dense round otherwise) and is
+    exclusive with ``microbatches``/``fused_probe``. Gated slots
+    (availability/battery) ride along with per-example weight 0.
+
     ``fused_probe`` (BEYOND-PAPER optimization, recorded in EXPERIMENTS.md
     §Perf): per-client losses for the λ-ascent come out of the *descent*
     forward (evaluated at w^t) instead of a second forward at w^{t+1} —
@@ -53,6 +66,13 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
     compute and HBM traffic. The simulator validates that training curves
     are indistinguishable (tests/test_perf_variants.py).
     """
+    if gather_k:
+        if microbatches != 1 or fused_probe:
+            raise ValueError(
+                "gather_k is exclusive with microbatches/fused_probe: the "
+                "gathered sub-batch covers only the selected clients")
+        return _make_gather_round(model, optimizer, num_clients, noise_std,
+                                  ctx)
 
     def weighted_loss_and_perex(p, b, mask):
         # K as the actual scheduled count: identical to the static
@@ -124,6 +144,54 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
             client_losses = per_client_losses(model, params, batch,
                                               num_clients, ctx,
                                               microbatches=microbatches)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return params, opt_state, FLRoundMetrics(
+            loss=loss, client_losses=client_losses, grad_norm=gnorm)
+
+    return round_fn
+
+
+def _make_gather_round(model, optimizer, num_clients: int, noise_std, ctx):
+    """The selected-K production round (see ``make_fl_round(gather_k=True)``).
+
+    The dense round's weighted mean over all B examples is
+    ``(1/B)·Σ_b mask[cid_b]·(N/K)·nll_b`` — every unselected example
+    contributes an exact 0 yet still pays its forward+backward. Here the K
+    selected blocks are gathered first and the same sum runs over K·(B/N)
+    examples with the identical ``/B`` normalizer, so loss and gradients
+    match the dense round to summation order while the descent compute
+    scales with the scheduled set. The λ-ascent probe
+    (``per_client_losses``) stays full-population: Alg. 1's control channel
+    needs every client reachable by the uniform ascent draw.
+    """
+
+    def round_fn(params, opt_state, batch, mask, idx, key):
+        cids = batch["client_ids"]
+        bsz = cids.shape[0]
+        m = bsz // num_clients  # examples per client block
+        k_sched = jnp.maximum(jnp.sum(mask), 1.0)
+        rows = (idx[:, None] * m + jnp.arange(m)[None, :]).reshape(-1)
+        sub = {name: v[rows] for name, v in batch.items()}
+        # per-example weights of the gathered rows: the dense round's
+        # mask[cid]·N/K, with gated slots (mask[idx] == 0) contributing 0
+        w = jnp.repeat(mask[idx], m) * (num_clients / k_sched)
+
+        def loss_fn(p):
+            per_ex = _per_example_nll(model, p, sub, ctx)
+            return jnp.sum(per_ex * w) / bsz
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+
+        if noise_std:
+            grads = add_awgn(grads, key, noise_std / k_sched)
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+
+        client_losses = per_client_losses(model, params, batch, num_clients,
+                                          ctx)
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree_util.tree_leaves(grads)))
@@ -208,7 +276,8 @@ def per_client_losses(model, params, batch, num_clients: int, ctx=None,
     return sums / jnp.maximum(cnts, 1.0)
 
 
-def make_grad_norm_probe(model, num_clients: int, ctx=None):
+def make_grad_norm_probe(model, num_clients: int, ctx=None,
+                         with_grads: bool = False):
     """GCA's control-channel probe: [N] per-client gradient norms at w^t.
 
     GCA selection needs ‖∇f_i(w^t)‖ BEFORE the round's mask exists, so this
@@ -217,12 +286,23 @@ def make_grad_norm_probe(model, num_clients: int, ctx=None):
     1/N of its activation memory). Requires the round's batch layout: each
     client's examples contiguous and equally sized (B % N == 0), as produced
     by the data pipeline — the reshape below slices clients apart.
+
+    ``with_grads=True`` returns ``(norms [N], losses [N], grads [N, P])``
+    with each client's mean gradient raveled to a flat f32 row and its mean
+    loss at w^t: the probe's per-client gradients ARE the round's descent
+    gradients (same batch, same params), so ``ParameterServer`` reuses them
+    as the update via a masked flat aggregate instead of running a second
+    full forward+backward. The price is holding the [N, P] stack the probe
+    previously discarded — inherent to GCA (it computes all N gradients
+    either way), but worth disabling at true model scale via the server's
+    ``reuse_probe_grads=False``.
     """
 
     def client_loss(params, cbatch):
         return jnp.mean(_per_example_nll(model, params, cbatch, ctx))
 
     gfn = jax.grad(client_loss)
+    vgfn = jax.value_and_grad(client_loss)
 
     def probe(params, batch):
         bsz = batch["client_ids"].shape[0]
@@ -237,10 +317,22 @@ def make_grad_norm_probe(model, num_clients: int, ctx=None):
                 for l in jax.tree_util.tree_leaves(g)))
             return None, norm
 
-        _, norms = jax.lax.scan(one, None, mb)
+        def one_with_grads(_, cbatch):
+            loss, g = vgfn(params, cbatch)
+            flat = jnp.concatenate([
+                l.astype(jnp.float32).reshape(-1)
+                for l in jax.tree_util.tree_leaves(g)])
+            return None, (jnp.sqrt(jnp.sum(jnp.square(flat))), loss, flat)
+
         # scatter by each block's OBSERVED client id, so contiguous-but-
         # permuted batches still attribute every norm to the right client
-        return jnp.zeros((num_clients,), norms.dtype).at[
-            mb["client_ids"][:, 0]].set(norms)
+        obs = mb["client_ids"][:, 0]
+        if not with_grads:
+            _, norms = jax.lax.scan(one, None, mb)
+            return jnp.zeros((num_clients,), norms.dtype).at[obs].set(norms)
+        _, (norms, losses, flats) = jax.lax.scan(one_with_grads, None, mb)
+        return (jnp.zeros((num_clients,), norms.dtype).at[obs].set(norms),
+                jnp.zeros((num_clients,), losses.dtype).at[obs].set(losses),
+                jnp.zeros(flats.shape, flats.dtype).at[obs].set(flats))
 
     return probe

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.flatten_util import ravel_pytree
+
 from repro.configs.base import FLConfig
 from repro.core.channel import (draw_channels_scenario, effective_channel,
                                 scenario_from_config)
@@ -32,10 +34,13 @@ from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  process_from_config, step_process)
 from repro.core.energy import round_energy
-from repro.core.selection import (availability_logits, gumbel_topk_mask,
-                                  select_clients)
-from repro.federated.rounds import (FLRoundMetrics, make_fl_round,
+from repro.core.selection import (EXACT_K_METHODS, availability_logits,
+                                  gumbel_topk_mask, select_clients,
+                                  select_clients_sparse)
+from repro.federated.rounds import (FLRoundMetrics, add_awgn, make_fl_round,
                                     make_grad_norm_probe, per_client_losses)
+from repro.kernels.aircomp.ops import aircomp_aggregate_flat
+from repro.optim import apply_updates
 from repro.utils.tree import tree_size
 
 
@@ -54,15 +59,26 @@ class ParameterServer:
     """CA-AFL parameter server for the production tier."""
 
     def __init__(self, model, optimizer, fl: FLConfig, *, ctx=None,
-                 jit_round: bool = True, seed: int = 0):
+                 jit_round: bool = True, seed: int = 0,
+                 reuse_probe_grads: bool = True):
         self.model = model
         self.fl = fl
         self.key = jax.random.PRNGKey(seed)
         self.round_fn = make_fl_round(
             model, optimizer, fl.num_clients, fl.clients_per_round,
             noise_std=fl.noise_std, ctx=ctx)
+        # the selected-K gather round (hot-path contract): used for exact-K
+        # methods whenever the batch has the canonical block layout (checked
+        # host-side per step; dense round_fn is the fallback)
+        self._gather_round = None
+        if fl.method in EXACT_K_METHODS:
+            self._gather_round = make_fl_round(
+                model, optimizer, fl.num_clients, fl.clients_per_round,
+                noise_std=fl.noise_std, ctx=ctx, gather_k=True)
         if jit_round:
             self.round_fn = jax.jit(self.round_fn)
+            if self._gather_round is not None:
+                self._gather_round = jax.jit(self._gather_round)
         self.optimizer = optimizer
         # Same parameterized physical layer as the simulator/sweep tier, so
         # scenario knobs (shadowing, per-client pathloss, floor) behave
@@ -71,19 +87,69 @@ class ParameterServer:
         self.process = process_from_config(fl)
         self._model_size = None  # resolved lazily from the params pytree
         # GCA needs per-client gradient norms BEFORE selection: a dedicated
-        # jitted probe at the current params (fixes the former ValueError)
+        # jitted probe at the current params (fixes the former ValueError).
+        # With reuse_probe_grads (default) the probe also returns each
+        # client's mean loss and flat mean gradient, and the round's descent
+        # update is their masked flat aggregate — the probe IS the round's
+        # gradient work (same batch, same params), so the former second
+        # full forward+backward disappears. Costs an [N, P] f32 stack;
+        # disable at true model scale.
         self._grad_probe = None
+        self._reuse_probe_grads = reuse_probe_grads
         if fl.method == "gca":
-            self._grad_probe = make_grad_norm_probe(model, fl.num_clients,
-                                                    ctx=ctx)
+            self._grad_probe = make_grad_norm_probe(
+                model, fl.num_clients, ctx=ctx, with_grads=reuse_probe_grads)
+            self._gca_apply = self._make_gca_apply()
             if jit_round:
                 self._grad_probe = jax.jit(self._grad_probe)
+                self._gca_apply = jax.jit(self._gca_apply)
         # control-channel loss probe for rounds where NOBODY transmits
         # (battery/availability gating): the λ-ascent still needs f_i(w̄)
         self._loss_probe = lambda p, b: per_client_losses(
             model, p, b, fl.num_clients, ctx)
         if jit_round:
             self._loss_probe = jax.jit(self._loss_probe)
+
+    def _make_gca_apply(self):
+        """The probe-reuse descent: masked flat aggregate of the probe's
+        per-client gradients (the same fused eq.-(10) shape as the
+        simulator's hot path), AWGN with the dense round's key discipline,
+        then the server optimizer."""
+        opt, noise_std = self.optimizer, self.fl.noise_std
+
+        def apply_fn(params, opt_state, gflat, probe_losses, mask, key):
+            k_sched = jnp.maximum(jnp.sum(mask), 1.0)
+            agg = aircomp_aggregate_flat(
+                gflat, mask, jnp.zeros((gflat.shape[1],), jnp.float32),
+                noise_std=0.0, k=k_sched)
+            grads = ravel_pytree(params)[1](agg)
+            if noise_std:
+                # identical per-leaf streams to the dense round's receiver
+                # noise, so reuse changes nothing but the summation order
+                grads = add_awgn(grads, key, noise_std / k_sched)
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            # the dense round's weighted loss == (1/K)·Σ_{i∈D} mean-loss_i,
+            # which the probe already measured at w^t
+            loss = jnp.sum(mask * probe_losses) / k_sched
+            return params, opt_state, loss, gnorm
+
+        return apply_fn
+
+    def _gather_layout_ok(self, batch) -> bool:
+        """The gather round indexes block j as client j's examples: verify
+        (host-side, pre-jit) the canonical ascending-contiguous layout the
+        data pipeline produces. Any other layout falls back to the dense
+        round — semantics first, the gather is only an optimization."""
+        cids = np.asarray(batch["client_ids"])
+        n = self.fl.num_clients
+        if cids.shape[0] % n:
+            return False
+        return bool(
+            (cids == np.repeat(np.arange(n), cids.shape[0] // n)).all())
 
     def _check_probe_layout(self, batch) -> None:
         """The grad-norm probe slices the batch into one equal-size block
@@ -145,16 +211,23 @@ class ParameterServer:
                 k_chan, self.scenario, fl.num_clients, fl.num_subcarriers))
             avail = eligible = None
 
+        idx = probe_losses = gflat = None
         if fl.method == "gca":
             self._check_probe_layout(batch)
-            gnorms = self._grad_probe(state.params, batch)
+            if self._reuse_probe_grads:
+                gnorms, probe_losses, gflat = self._grad_probe(
+                    state.params, batch)
+            else:
+                gnorms = self._grad_probe(state.params, batch)
             mask = select_clients("gca", k_sel, state.lam, h,
                                   fl.clients_per_round, grad_norms=gnorms,
                                   gca=fl.gca, avail=eligible)
         else:
-            mask = select_clients(fl.method, k_sel, state.lam, h,
-                                  fl.clients_per_round, C=fl.energy_C,
-                                  gca=fl.gca, avail=eligible)
+            # the same single top_k as the simulator tier: the mask for the
+            # ledger/λ bookkeeping, the indices for the gather round
+            mask, idx = select_clients_sparse(
+                fl.method, k_sel, state.lam, h, fl.clients_per_round,
+                C=fl.energy_C, avail=eligible)
 
         # --- compiled round on the mesh ------------------------------------
         if int(jnp.sum(mask)) == 0:
@@ -167,6 +240,21 @@ class ParameterServer:
                 loss=jnp.zeros(()),
                 client_losses=self._loss_probe(state.params, batch),
                 grad_norm=jnp.zeros(()))
+        elif gflat is not None:
+            # GCA probe-reuse: the probe's per-client gradients become the
+            # round's descent update (same batch, same params — the former
+            # second forward+backward was pure double work)
+            params, opt_state, loss, gnorm = self._gca_apply(
+                state.params, state.opt_state, gflat, probe_losses, mask,
+                k_noise)
+            metrics = FLRoundMetrics(
+                loss=loss,
+                client_losses=self._loss_probe(params, batch),
+                grad_norm=gnorm)
+        elif idx is not None and self._gather_round is not None \
+                and self._gather_layout_ok(batch):
+            params, opt_state, metrics = self._gather_round(
+                state.params, state.opt_state, batch, mask, idx, k_noise)
         else:
             params, opt_state, metrics = self.round_fn(
                 state.params, state.opt_state, batch, mask, k_noise)

@@ -6,6 +6,12 @@ model dimension — one HBM read of the [N, M] stacked updates, one HBM write
 of the [M] aggregate. Blocked over M with VMEM tiles of [N, TILE_M]; the
 weighted reduction over N runs on the VPU as an fp32 accumulation.
 
+``noise_std`` and ``k`` ride in as (1, 1) SMEM scalars, NOT static compile
+args: the simulator traces both (the receiver noise is a sweepable scenario
+knob and K is the *actual* scheduled count under availability/battery
+gating), so baking them into the executable would force one recompile per
+sweep cell — exactly what the batched sweep engine exists to avoid.
+
 TPU adaptation note (DESIGN.md §2): the paper's multiple-access channel does
 this sum "for free" in the air; on TPU the sum is explicit, so fusing
 scale+sum+noise+normalize removes three extra HBM round-trips a naive
@@ -18,25 +24,26 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 TILE_M = 1024  # lane-dim tile; multiple of 128
 
 
-def _aircomp_kernel(x_ref, w_ref, z_ref, o_ref, *, noise_std: float, inv_k: float):
+def _aircomp_kernel(ns_ref, ik_ref, x_ref, w_ref, z_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # [N, TM]
     w = w_ref[...].astype(jnp.float32)          # [N, 1]
     acc = jnp.sum(x * w, axis=0)                # [TM]
-    acc = acc + noise_std * z_ref[...].astype(jnp.float32)
-    o_ref[...] = acc * inv_k
+    acc = acc + ns_ref[0, 0] * z_ref[...].astype(jnp.float32)
+    o_ref[...] = acc * ik_ref[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("noise_std", "k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
-                   *, noise_std: float, k: float,
-                   interpret: bool = False) -> jnp.ndarray:
+                   *, noise_std, k, interpret: bool = False) -> jnp.ndarray:
     """x [N, M]; w [N]; z [M] -> aggregated [M] fp32.
 
-    M is padded to TILE_M internally; N rides whole in VMEM (N=100 clients x
+    ``noise_std`` and ``k`` may be Python floats or traced jnp scalars. M is
+    padded to TILE_M internally; N rides whole in VMEM (N=100 clients x
     1024 lanes x 4B = 400 KiB << 16 MiB VMEM).
     """
     n, m = x.shape
@@ -47,10 +54,16 @@ def aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
         z = jnp.pad(z, (0, pad))
     mp = m + pad
     grid = (mp // tile,)
+    ns = jnp.asarray(noise_std, jnp.float32).reshape(1, 1)
+    inv_k = (1.0 / jnp.asarray(k, jnp.float32)).reshape(1, 1)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM)
     out = pl.pallas_call(
-        functools.partial(_aircomp_kernel, noise_std=noise_std, inv_k=1.0 / k),
+        _aircomp_kernel,
         grid=grid,
         in_specs=[
+            scalar_spec,
+            scalar_spec,
             pl.BlockSpec((n, tile), lambda i: (0, i)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((tile,), lambda i: (i,)),
@@ -58,5 +71,5 @@ def aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
         interpret=interpret,
-    )(x, w[:, None], z)
+    )(ns, inv_k, x, w[:, None], z)
     return out[:m]

@@ -18,9 +18,14 @@ def on_tpu() -> bool:
 
 
 def aircomp_aggregate_flat(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
-                           *, noise_std: float, k: float,
+                           *, noise_std, k,
                            use_pallas: bool = None) -> jnp.ndarray:
-    """Fused (sum_i w_i x_i + sigma z)/k over stacked flat updates [N, M]."""
+    """Fused (sum_i w_i x_i + sigma z)/k over stacked flat updates [N, M].
+
+    ``noise_std`` and ``k`` may be traced scalars (the simulator sweeps the
+    former and computes the latter from the round's actual scheduled count);
+    both paths accept them without recompiling per value.
+    """
     if use_pallas is None:
         use_pallas = on_tpu()
     if use_pallas:

@@ -186,6 +186,42 @@ def test_dynamic_scenario_end_to_end_in_sweep(sweep_data):
                                np.asarray(ref.min_battery), rtol=1e-5)
 
 
+def test_eval_every_groups_and_matches(sweep_data):
+    """eval_every is structural: cells with different cadences land in
+    different compilation groups, cells with the same cadence share one —
+    and the cadenced cell still matches its standalone run."""
+    specs = [("e1", _fl("ca_afl")),
+             ("e4a", _fl("ca_afl", eval_every=4)),
+             ("e4b", _fl("ca_afl", eval_every=4, energy_C=2.0))]
+    sweep.reset_trace_log()
+    res = sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0,))
+    assert sweep.trace_count() == 2  # {eval_every=1, eval_every=4}
+    ref = run_simulation(MODEL, _fl("ca_afl", eval_every=4), sweep_data,
+                         seed=0)
+    np.testing.assert_allclose(
+        np.asarray(res.history("e4a").avg_acc)[0], np.asarray(ref.avg_acc),
+        atol=1e-6)
+    # forward-filled between evals
+    acc = np.asarray(res.history("e4b").avg_acc)[0]
+    for t in range(len(acc)):
+        np.testing.assert_allclose(acc[t], acc[(t // 4) * 4])
+
+
+def test_sweep_runner_donates_states_without_warnings(sweep_data):
+    """The runner donates the SimState stack (the scan carry reuses the
+    caller's buffers); XLA must find the input→output aliasing — a
+    'donated buffers were not usable' warning means it did not."""
+    import warnings
+
+    specs = [("a", _fl("ca_afl", rounds=4)),
+             ("b", _fl("fedavg", rounds=4))]
+    with warnings.catch_warnings(record=True) as log:
+        warnings.simplefilter("always")
+        sweep.run_sweep(MODEL, sweep_data, specs, seeds=(0, 1))
+    donation_warnings = [w for w in log if "donat" in str(w.message).lower()]
+    assert not donation_warnings, [str(w.message) for w in donation_warnings]
+
+
 def test_scenarios_change_outcomes_in_sweep(sweep_data):
     """Scenario knobs are live inside the jitted sweep: a 12 dB pathloss
     spread changes the energy ledger under uniform (fedavg) selection."""
