@@ -7,10 +7,14 @@ Measures, per cell (N × {dense, sparse, sparse+eval cadence}):
   - peak live bytes of the compiled executable (XLA memory analysis:
     arguments + outputs + temporaries)
 
-and writes ``benchmarks/results/BENCH_perf.json`` — the artifact CI uploads
-per commit, with the headline ``speedup_n100`` = hot path (sparse gather +
-eval_every cadence) over the dense path at the paper's N=100, K=10. This PR
-is the baseline of the perf trajectory.
+plus a **sharded-sweep throughput cell** (``benchmarks/shard_bench.py``, run
+as a subprocess so its forced 8-device host platform cannot skew the
+single-device cells): the same seeds-grid swept with ``run_sweep(devices=1)``
+vs ``devices=8``, recording the scale-out speedup of the cells mesh.
+
+Writes ``benchmarks/results/BENCH_perf.json`` — the artifact CI uploads per
+commit, with the headline ``speedup_n100`` = hot path (sparse gather +
+eval_every cadence) over the dense path at the paper's N=100, K=10.
 
 `PYTHONPATH=src python -m benchmarks.perf_bench`
 """
@@ -18,6 +22,8 @@ from __future__ import annotations
 
 import json
 import platform
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -87,6 +93,12 @@ def bench_cell(model, fl, data, dense: bool):
     }
 
 
+def _write(payload):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / "BENCH_perf.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 def main():
     model = logistic_regression(DIM, 10)
     payload = {
@@ -125,19 +137,47 @@ def main():
               f"hot path {cells['speedup_hot_path']:.1f}x over dense")
 
     payload["speedup_n100"] = payload["cells"]["n100"]["speedup_hot_path"]
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    out = RESULTS / "BENCH_perf.json"
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"[perf_bench] wrote {out} (speedup_n100="
-          f"{payload['speedup_n100']:.2f}x)")
-    # acceptance floor: the hot path must stay >= 3x the dense reference at
-    # the paper's N=100, K=10 — fail the CI job on a perf regression, don't
-    # just record it
+
+    # ---- sharded-sweep scale-out cell (subprocess: needs its own 8-device
+    # host platform, which must not leak into the cells above) -------------
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.shard_bench"],
+            capture_output=True, text=True, check=True,
+            cwd=Path(__file__).resolve().parent.parent)
+        shard = json.loads(proc.stdout)
+        payload["cells"]["sharded_sweep"] = shard
+        print(f"[perf_bench] sharded sweep: devices=8 "
+              f"{shard['speedup_devices8']:.2f}x devices=1 "
+              f"({shard['cpu_count']} cores)")
+    except subprocess.CalledProcessError as e:
+        # still write the already-measured cells before failing the job —
+        # same artifact-first policy as the floors below
+        print(f"[perf_bench] shard_bench failed:\n{e.stderr}", file=sys.stderr)
+        payload["cells"]["sharded_sweep"] = {"error": e.stderr[-2000:]}
+        _write(payload)
+        raise
+
+    _write(payload)
+    print(f"[perf_bench] wrote {RESULTS / 'BENCH_perf.json'} "
+          f"(speedup_n100={payload['speedup_n100']:.2f}x)")
+    # acceptance floors, enforced AFTER the artifact is written so a failing
+    # run still leaves the measured cells behind for diagnosis:
+    # (1) the hot path must stay >= 3x the dense reference at the paper's
+    # N=100, K=10; (2) the sharded sweep must deliver >= 3x at devices=8 —
+    # but only where the host can physically provide it (8 forced host
+    # devices on a 2-core runner cap out near 2x regardless of the sharding
+    # layer, so small hosts record the number without failing the job)
     if payload["speedup_n100"] < 3.0:
         raise SystemExit(
             f"hot-path regression: speedup_n100 = "
             f"{payload['speedup_n100']:.2f}x < 3x acceptance floor")
+    shard = payload["cells"]["sharded_sweep"]
+    if (shard["cpu_count"] or 0) >= 8 and shard["speedup_devices8"] < 3.0:
+        raise SystemExit(
+            f"sharded-sweep regression: devices=8 speedup "
+            f"{shard['speedup_devices8']:.2f}x < 3x floor on "
+            f"{shard['cpu_count']} cores")
     return payload
 
 

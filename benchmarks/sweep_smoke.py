@@ -9,6 +9,7 @@ uploads so the performance trajectory of the sweep engine accrues per-commit.
 """
 from __future__ import annotations
 
+import os
 import platform
 import time
 from pathlib import Path
@@ -25,6 +26,13 @@ RESULTS = Path(__file__).resolve().parent / "results"
 
 
 def main():
+    # SWEEP_SMOKE_DEVICES=auto|<int> shards the seed axis over a cells mesh
+    # (the CI multi-device lane sets it together with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8); unset = the
+    # single-device program, bit-identical either way.
+    devices = os.environ.get("SWEEP_SMOKE_DEVICES") or None
+    if devices and devices != "auto":
+        devices = int(devices)
     x, y, xt, yt = make_fmnist_like(1200, 300, dim=48, seed=0)
     xs, ys = sorted_label_shards(x, y, 16)
     xts, yts = sorted_label_shards(xt, yt, 16)
@@ -45,14 +53,15 @@ def main():
 
     sweep.reset_trace_log()
     t0 = time.perf_counter()
-    result = sweep.run_sweep(model, data, specs, seeds=seeds)
+    result = sweep.run_sweep(model, data, specs, seeds=seeds, devices=devices)
     jax.block_until_ready([h.avg_acc for h in result.histories])
     wall_s = time.perf_counter() - t0
 
     cells = len(specs) * len(seeds)
     print(f"[sweep_smoke] {len(specs)} configs x {len(seeds)} seeds "
           f"({cells} cells) in {wall_s:.1f}s, "
-          f"{sweep.trace_count()} compilations")
+          f"{sweep.trace_count()} compilations, "
+          f"devices={devices or 1}")
     summary = result.summary(window=5)
     for lbl, row in summary.items():
         print(f"  {lbl:28s} worst_acc={row['worst_acc']:.3f} "

@@ -61,7 +61,16 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None) -> Any:
-    """Restore into the structure of `template` (shapes/dtypes must match)."""
+    """Restore into the structure of `template` (shapes/dtypes must match).
+
+    Every leaf comes back as a fresh *writeable* array: ``np.frombuffer``
+    views the read-only msgpack bytes, so without the ``.copy()`` a restored
+    leaf could neither be mutated in place nor safely donated to a jitted
+    update step (XLA would alias a buffer whose storage it must not reuse).
+    Dtypes are validated against the template — a silently reinterpreted
+    leaf (f32 bytes viewed as f64, or a truncating cast) corrupts training
+    state, so mismatches raise instead.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -74,7 +83,16 @@ def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None
     for p, leaf in leaves_with_path:
         key = _KEY_SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
         rec = flat[key]
-        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        # dtype without materializing the leaf (device arrays stay on
+        # device); a dtype-less template leaf (plain Python scalar) carries
+        # no intent about width, so it keeps the old un-validated behavior
+        # instead of failing against NumPy's int64/float64 inference
+        if hasattr(leaf, "dtype") and np.dtype(rec["dtype"]) != np.dtype(leaf.dtype):
+            raise ValueError(
+                f"dtype mismatch for {key}: checkpoint has {rec['dtype']}, "
+                f"template wants {np.dtype(leaf.dtype)}")
+        arr = (np.frombuffer(rec["data"], dtype=rec["dtype"])
+               .reshape(rec["shape"]).copy())
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
         out.append(arr)

@@ -13,6 +13,9 @@ from repro.core.selection import (EXACT_K_METHODS, select_clients,
                                   select_clients_sparse, gumbel_topk_mask)
 from repro.core.dro import project_simplex, lambda_ascent
 from repro.core.aircomp import (aircomp_aggregate, aircomp_aggregate_tree,
-                                aircomp_aggregate_stack_tree)
+                                aircomp_aggregate_stack_tree,
+                                aircomp_psum_tree)
+from repro.core.sharding import (cell_mesh, client_mesh, distributed_top_k,
+                                 population_device_count)
 from repro.core.sweep import (SweepPoint, SweepResult, expand_grid, run_sweep,
                               sweep_point_from_config)

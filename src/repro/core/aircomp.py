@@ -72,14 +72,29 @@ def aircomp_aggregate_tree(trees, mask, key, noise_std: float = 0.0, k=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def flat_awgn(key, leaves) -> jnp.ndarray:
+def stack_accum_dtype(leaves):
+    """Accumulation dtype of the fused flat buffer: the widest leaf dtype,
+    never narrower than f32.
+
+    The flat path used to ravel EVERY leaf through float32, silently
+    degrading float64 models the per-leaf reference aggregates at native
+    precision (and needlessly up-casting nothing for bf16, which still wants
+    f32 accumulation). ``result_type`` over the leaf dtypes + f32 gives f64
+    when any leaf is f64 and f32 otherwise — so bf16/f32 models keep the f32
+    fused pass and f64 models stop losing half their mantissa.
+    """
+    return jnp.result_type(jnp.float32, *[leaf.dtype for leaf in leaves])
+
+
+def flat_awgn(key, leaves, dtype=jnp.float32) -> jnp.ndarray:
     """Receiver-noise vector z [P] for a flat model buffer.
 
     Drawn leaf-by-leaf with exactly the key discipline of
     :func:`aircomp_aggregate_tree` (split ``key`` into one subkey per leaf,
-    normal of the leaf's per-client shape/dtype), then raveled — so the
-    fused path injects bit-identical noise to the per-leaf reference and
-    differential tests only see summation-order differences.
+    normal of the leaf's per-client shape/dtype), then raveled into the
+    accumulation ``dtype`` — so the fused path injects bit-identical noise
+    to the per-leaf reference and differential tests only see
+    summation-order differences.
 
     ``leaves``: the flattened leaves of the STACKED tree (leading client
     axis); the noise shape is each leaf's shape without that axis.
@@ -87,7 +102,7 @@ def flat_awgn(key, leaves) -> jnp.ndarray:
     keys = jax.random.split(key, len(leaves))
     return jnp.concatenate([
         jax.random.normal(kk, leaf.shape[1:], leaf.dtype)
-        .reshape(-1).astype(jnp.float32)
+        .reshape(-1).astype(dtype)
         for leaf, kk in zip(leaves, keys)
     ])
 
@@ -101,19 +116,24 @@ def aircomp_aggregate_stack_tree(trees, weights, key, noise_std=0.0, k=None,
     mask/gain entries (0 for availability/battery-gated slots). The stack is
     raveled ONCE into a contiguous [K, P] buffer and the whole masked-sum +
     AWGN + 1/K pass runs fused over it — the Pallas kernel on TPU, a jnp
-    einsum elsewhere (see ``repro.kernels.aircomp.ops``).
+    einsum elsewhere (see ``repro.kernels.aircomp.ops``). Accumulation runs
+    at the widest leaf dtype (:func:`stack_accum_dtype`), so float64 models
+    aggregate at native precision like the per-leaf reference; the Pallas
+    kernel is f32-only and the dispatcher falls back to the jnp path for
+    wider buffers.
     """
     if k is None:
         k = jnp.sum(weights)
     leaves, treedef = jax.tree_util.tree_flatten(trees)
     kk = leaves[0].shape[0]
+    acc_dtype = stack_accum_dtype(leaves)
     flat = jnp.concatenate(
-        [leaf.reshape(kk, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+        [leaf.reshape(kk, -1).astype(acc_dtype) for leaf in leaves], axis=1)
     if isinstance(noise_std, (int, float)) and noise_std == 0:
         # statically noise-free: skip the model-sized Gaussian draw entirely
-        z = jnp.zeros((flat.shape[1],), jnp.float32)
+        z = jnp.zeros((flat.shape[1],), acc_dtype)
     else:
-        z = flat_awgn(key, leaves)
+        z = flat_awgn(key, leaves, dtype=acc_dtype)
     agg = aircomp_aggregate_flat(flat, weights, z, noise_std=noise_std, k=k,
                                  use_pallas=use_pallas)
     out, off = [], 0
@@ -122,4 +142,38 @@ def aircomp_aggregate_stack_tree(trees, weights, key, noise_std=0.0, k=None,
         out.append(agg[off:off + size].reshape(leaf.shape[1:])
                    .astype(leaf.dtype))
         off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def aircomp_psum_tree(trees_local, weights_local, key, noise_std=0.0, k=None,
+                      axis_name: str = "clients"):
+    """Population-sharded eq. (10): local weighted partial-sum + ``psum``.
+
+    ``trees_local``: the [n_local, ...] stacked updates of THIS shard's
+    clients; ``weights_local`` [n_local]: their mask/gain entries. Each leaf
+    is partially summed over the local clients, all-reduced across the
+    ``clients`` mesh axis — the over-the-air multiple-access superposition
+    IS this all-reduce (module docstring) — then the replicated AWGN is
+    added and the 1/K applied. The noise uses the per-leaf key discipline of
+    :func:`aircomp_aggregate_tree` with the same (replicated) key on every
+    device, so the sharded aggregate differs from the dense reference only
+    in the cross-shard summation order of the partial sums.
+
+    ``k`` must be the GLOBAL scheduled count (computed from the replicated
+    full-N mask); it is not derivable from ``weights_local`` alone.
+    """
+    if k is None:
+        k = jax.lax.psum(jnp.sum(weights_local), axis_name)
+    leaves, treedef = jax.tree_util.tree_flatten(trees_local)
+    keys = jax.random.split(key, len(leaves))
+    static_noise_free = isinstance(noise_std, (int, float)) and noise_std == 0
+    out = []
+    for leaf, kk in zip(leaves, keys):
+        mshape = (-1,) + (1,) * (leaf.ndim - 1)
+        total = jax.lax.psum(
+            jnp.sum(leaf * weights_local.reshape(mshape), axis=0), axis_name)
+        if not static_noise_free:
+            total = total + noise_std * jax.random.normal(
+                kk, total.shape, total.dtype)
+        out.append(total / k)
     return jax.tree_util.tree_unflatten(treedef, out)

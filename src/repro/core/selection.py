@@ -33,7 +33,7 @@ from repro.core.poe import ca_afl_logits
 
 __all__ = ["GCAParams", "EXACT_K_METHODS", "availability_logits",
            "gumbel_topk_mask", "gumbel_topk", "topk_mask", "select_clients",
-           "select_clients_sparse"]
+           "select_clients_sparse", "exact_k_scores", "select_clients_pop"]
 
 # Methods whose scheduled set is bounded by a static K (lax.top_k over a
 # score vector). These — and only these — can ride the simulator's sparse
@@ -141,6 +141,40 @@ def select_clients(
     raise ValueError(f"unknown selection method {method!r}")
 
 
+def exact_k_scores(
+    method: str,
+    key,
+    lam: jnp.ndarray,
+    h_eff: jnp.ndarray,
+    C: float = 0.0,
+    avail: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """The score vector [N] whose ``lax.top_k`` IS the method's selection.
+
+    Single source of the per-method scoring: ``select_clients_sparse`` feeds
+    it to a dense ``lax.top_k``; the population-sharded path
+    (:func:`select_clients_pop`) slices it per shard and runs the
+    local-then-global distributed top-k — identical draws (the Gumbel noise
+    consumes ``key`` exactly as before; greedy draws nothing), so the two
+    paths select identically by construction.
+    """
+    a_logits = availability_logits(avail)
+    if method == "fedavg":
+        logits = jnp.zeros(lam.shape) + a_logits
+    elif method == "afl":
+        logits = jnp.log(jnp.clip(lam, 1e-38)) + a_logits
+    elif method == "ca_afl":
+        logits = ca_afl_logits(lam, h_eff, C) + a_logits
+    elif method == "greedy":
+        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel
+        # — deterministic, no Gumbel draw.
+        return h_eff + a_logits
+    else:
+        raise ValueError(
+            f"sparse selection needs a static-K method, got {method!r}")
+    return logits + jax.random.gumbel(key, logits.shape)
+
+
 def select_clients_sparse(
     method: str,
     key,
@@ -163,21 +197,37 @@ def select_clients_sparse(
     Only :data:`EXACT_K_METHODS` qualify; GCA's thresholded count is
     unbounded by ``k`` and must use the dense :func:`select_clients` path.
     """
-    n = lam.shape[0]
-    a_logits = availability_logits(avail)
-    if method == "fedavg":
-        mask, idx = gumbel_topk(key, jnp.zeros((n,)) + a_logits, k)
-    elif method == "afl":
-        mask, idx = gumbel_topk(
-            key, jnp.log(jnp.clip(lam, 1e-38)) + a_logits, k)
-    elif method == "ca_afl":
-        mask, idx = gumbel_topk(key, ca_afl_logits(lam, h_eff, C) + a_logits, k)
-    elif method == "greedy":
-        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel.
-        mask, idx = _exact_k(h_eff + a_logits, k)
-    else:
-        raise ValueError(
-            f"sparse selection needs a static-K method, got {method!r}")
+    mask, idx = _exact_k(exact_k_scores(method, key, lam, h_eff, C, avail), k)
+    if avail is not None:
+        mask = mask * avail
+    return mask, idx
+
+
+def select_clients_pop(
+    method: str,
+    key,
+    lam: jnp.ndarray,
+    h_eff: jnp.ndarray,
+    k: int,
+    n_local: int,
+    axis_name: str,
+    C: float = 0.0,
+    avail: Optional[jnp.ndarray] = None,
+):
+    """Population-sharded exact-K selection: ``(mask [N], idx [K])``.
+
+    Scores are computed replicated (every [N] input is replicated under the
+    clients mesh — see ``core/sharding.py``), each shard top-k's its own
+    rows, and the global winner set comes from a second top-k over the
+    gathered candidates (``sharding.distributed_top_k``) — equal to
+    :func:`select_clients_sparse` by construction, ties included.
+    """
+    from repro.core.sharding import distributed_top_k, local_slice
+
+    scores = exact_k_scores(method, key, lam, h_eff, C, avail)
+    mask, idx = distributed_top_k(
+        local_slice(scores, axis_name, n_local), k, axis_name,
+        n_global=scores.shape[0])
     if avail is not None:
         mask = mask * avail
     return mask, idx

@@ -1,0 +1,242 @@
+"""Multi-device scale-out: the device-mesh layer (ROADMAP "sharding" lever).
+
+Two embarrassingly-parallel axes of the engine are sharded here:
+
+  - **Sweep cells** (``repro.core.sweep.run_sweep(devices=...)``): the stacked
+    [S, R] points × seeds grid of a compilation group is split over a 1-D
+    ``"cells"`` mesh with ``shard_map`` — each device scans its own seed
+    columns of every point row. Cells are fully independent (no cross-cell
+    reduction anywhere in the round), so the sharded sweep is *bit-identical*
+    to the single-device sweep on every history leaf.
+
+  - **Client population** (``run_simulation(mesh=...)``, dense/GCA rounds +
+    the full N-client test eval): per-client model-sized state — data shards,
+    batch gathers, local SGD stacks, per-client gradients/losses/accuracies —
+    is sharded over a ``"clients"`` mesh axis, and eq. (10)'s over-the-air
+    superposition is computed as a local weighted partial-sum followed by a
+    ``psum`` (``aircomp.aircomp_psum_tree``): the multiple-access sum the
+    paper gets "for free" in the air IS the all-reduce, exactly the mapping
+    ``core/aircomp.py`` documents. Exact-K selection is a local top-k per
+    shard followed by a global top-k over the K·n_shards candidates
+    (:func:`distributed_top_k`), equal to the dense ``lax.top_k`` by
+    construction, tie-break included.
+
+Key discipline under sharding: every [N]-shaped control-plane draw (channels,
+Gumbel noise, batch indices, availability, process innovations) is *replicated*
+— each device draws the full-N array from the identical key and slices its
+rows — and the model-sized AWGN of eq. (10) is drawn once per leaf with the
+per-leaf key discipline of ``aircomp_aggregate_tree``. Consequence: masks, λ
+inputs, energy and every O(N) scalar are bit-identical to the single-device
+program, and the model trajectory differs only in the summation order of the
+cross-shard ``psum``. A mesh of size 1 is a structural no-op: callers skip the
+``shard_map`` wrapping entirely and compile today's exact programs.
+
+On this CPU container the mesh is realized with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see the CI
+multi-device lane and ``tests/test_sharding.py``); on TPU the same code
+shards over real chips and the ``psum`` lowers to the ICI all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "CELL_AXIS", "CLIENT_AXIS", "cell_mesh", "client_mesh",
+    "resolve_device_count", "population_device_count", "local_slice",
+    "all_gather_axis", "distributed_top_k", "shard_leading", "shard_batch",
+    "run_simulation_sharded",
+]
+
+# Mesh axis names. "cells" parallelizes independent sweep cells (points ×
+# seeds); "clients" parallelizes the client population inside one simulation.
+CELL_AXIS = "cells"
+CLIENT_AXIS = "clients"
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction / device accounting
+# ---------------------------------------------------------------------------
+
+
+def _mesh(n_devices: int, axis: str) -> Mesh:
+    devs = jax.devices()
+    if n_devices > len(devs):
+        raise ValueError(
+            f"requested {n_devices} devices, only {len(devs)} present "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.array(devs[:n_devices]), (axis,))
+
+
+def cell_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``"cells"`` mesh over the first ``n_devices`` (default: all)."""
+    return _mesh(n_devices or jax.device_count(), CELL_AXIS)
+
+
+def client_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``"clients"`` mesh over the first ``n_devices`` (default: all)."""
+    return _mesh(n_devices or jax.device_count(), CLIENT_AXIS)
+
+
+def resolve_device_count(devices) -> int:
+    """Normalize a ``devices`` request: None -> 1 (single-device, today's
+    exact program), "auto" -> every local device, int -> min(int, present)."""
+    if devices is None:
+        return 1
+    if devices == "auto":
+        return jax.device_count()
+    n = int(devices)
+    if n < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    return min(n, jax.device_count())
+
+
+def population_device_count(num_clients: int,
+                            devices: Optional[int] = None) -> int:
+    """Largest device count <= ``devices`` (default: all) dividing N evenly —
+    population sharding keeps equal client shards per device."""
+    n_dev = devices or jax.device_count()
+    while num_clients % n_dev:
+        n_dev -= 1
+    return n_dev
+
+
+# ---------------------------------------------------------------------------
+# In-shard-map primitives
+# ---------------------------------------------------------------------------
+
+
+def local_slice(arr: jnp.ndarray, axis_name: str, n_local: int) -> jnp.ndarray:
+    """This device's rows of a *replicated* leading-[N] array.
+
+    The control plane draws full-N arrays on every device (identical values —
+    same key, same shape); the model-sized work then runs on the local rows
+    only. ``n_local`` must be static (N // mesh size)."""
+    d = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(arr, d * n_local, n_local)
+
+
+def all_gather_axis(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Concatenate per-shard leading axes back to the global [N] order."""
+    return jax.lax.all_gather(x, axis_name, tiled=True)
+
+
+def distributed_top_k(scores_local: jnp.ndarray, k: int, axis_name: str,
+                      n_global: int):
+    """Exact-K selection over a sharded score vector: ``(mask [N], idx [k])``.
+
+    Local ``lax.top_k`` of min(k, n_local) candidates per shard, then a global
+    ``lax.top_k`` over the gathered K·n_shards candidates. Equal to the dense
+    ``lax.top_k(scores, k)`` *by construction*, tie-break pinned: within a
+    shard ``lax.top_k`` emits ties lowest-index-first, and shards gather in
+    index order, so the global pass also resolves ties to the lowest global
+    index — exactly the dense semantics the masks were always built from.
+    (A shard can contribute at most n_local elements to the true top-k, so
+    min(k, n_local) candidates per shard lose nothing.)
+    """
+    n_local = scores_local.shape[0]
+    kk = min(k, n_local)
+    v, i = jax.lax.top_k(scores_local, kk)
+    gi = i + jax.lax.axis_index(axis_name) * n_local
+    cand_v = all_gather_axis(v, axis_name)            # [D*kk], shard order
+    cand_i = all_gather_axis(gi, axis_name)
+    _, pos = jax.lax.top_k(cand_v, k)
+    idx = cand_i[pos]
+    mask = jnp.zeros((n_global,), jnp.float32).at[idx].set(1.0)
+    return mask, idx
+
+
+# ---------------------------------------------------------------------------
+# Host-side sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def shard_leading(tree, mesh: Mesh, axis: Optional[str] = None):
+    """``device_put`` every leaf with its leading axis split over ``mesh``."""
+    axis = axis or mesh.axis_names[0]
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def shard_batch(batch: dict, mesh: Mesh) -> dict:
+    """Shard a production-tier batch dict over the clients axis.
+
+    Leaves whose leading (example) axis divides the mesh size are split; any
+    other leaf is replicated. With the canonical one-block-per-client layout
+    this partitions per-client forward/backward work across devices under
+    jit's SPMD partitioner — semantics are unchanged (sharding is metadata to
+    XLA), it is purely a placement hint.
+    """
+    axis = mesh.axis_names[0]
+    split = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+    def put(x):
+        arr = jnp.asarray(x)
+        ok = arr.ndim >= 1 and arr.shape[0] % mesh.size == 0
+        return jax.device_put(arr, split if ok else repl)
+    return {k: put(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# Population-sharded simulation runner
+# ---------------------------------------------------------------------------
+
+
+def run_simulation_sharded(model, fl, data, mesh: Mesh, seed=None,
+                           dense: bool = True):
+    """Run T rounds with the client population sharded over ``mesh``.
+
+    The whole scan runs inside one ``shard_map``: per-client data shards ride
+    in split over the ``clients`` axis, the carry (global model, λ, energy,
+    keys, ChanState) is replicated, and the round body is the simulator's own
+    ``round_fn`` built with ``axis_name`` set (see
+    ``simulator.make_param_round_fn``) — dense/GCA rounds only, the regime
+    population sharding exists for. Exact-K methods run their dense reference
+    program (sharded D ways); the selected-K gather path stays single-device.
+    """
+    from repro.core.simulator import init_sim_state, make_param_round_fn
+    from repro.core.sweep import sweep_point_from_config
+    from repro.utils.tree import tree_size
+
+    axis = mesh.axis_names[0]
+    n_dev = mesh.size
+    if fl.num_clients % n_dev:
+        raise ValueError(
+            f"population sharding needs N % devices == 0, got "
+            f"N={fl.num_clients}, devices={n_dev} "
+            "(pick a count via population_device_count)")
+
+    seed = fl.seed if seed is None else seed
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(model, fl, jax.random.PRNGKey(seed),
+                           process=point.process)
+    model_size = tree_size(state.w)
+
+    def run(point, state, x, y, x_test, y_test):
+        # x/y/x_test/y_test arrive as this device's client rows
+        round_fn = make_param_round_fn(
+            model, fl, (x, y, x_test, y_test), model_size, fl.method,
+            dense=dense, axis_name=axis)
+        _, hist = jax.lax.scan(
+            lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
+        return hist
+
+    shard_mapped = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(), check_rep=False)
+    sharded_data = tuple(shard_leading(jnp.asarray(d), mesh, axis)
+                         for d in data)
+    return jax.jit(shard_mapped)(point, state, *sharded_data)
+
+
+def pad_to_multiple(values: Sequence[int], multiple: int) -> list[int]:
+    """Pad a seed list so its length divides the cells mesh evenly; padding
+    reuses existing entries (the padded columns are computed and discarded)."""
+    pad = (-len(values)) % multiple
+    return list(values) + [values[i % len(values)] for i in range(pad)]

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core.aircomp import (aircomp_aggregate_stack_tree,
-                                aircomp_aggregate_tree)
+                                aircomp_aggregate_tree, aircomp_psum_tree)
 from repro.core.channel import draw_channels_scenario, effective_channel
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
@@ -59,7 +59,8 @@ from repro.core.dynamics import (commit_process, init_chan_state,
 from repro.core.energy import round_energy
 from repro.core.selection import (EXACT_K_METHODS, availability_logits,
                                   gumbel_topk, select_clients,
-                                  select_clients_sparse)
+                                  select_clients_pop, select_clients_sparse)
+from repro.core.sharding import all_gather_axis, local_slice
 from repro.models.logreg import SimModel
 from repro.utils.tree import tree_size
 
@@ -107,14 +108,37 @@ def _sample_batches(key, x, y, batch_size):
     return xb, yb
 
 
-def _gather_batches(x, y, cidx, bidx):
+def _needs_two_stage_gather(n: int, s: int) -> bool:
+    """True when the composed flat index ``cidx * s + bidx`` (max N·S - 1)
+    no longer fits int32 — the static dispatch predicate of
+    :func:`_gather_batches`, decided from shapes at trace time."""
+    return n * s - 1 > jnp.iinfo(jnp.int32).max
+
+
+def _gather_batches(x, y, cidx, bidx, two_stage: bool | None = None):
     """Batches of the selected clients only: [K, B, ...].
 
     ``cidx`` [K] client indices; ``bidx`` [K, B] in-shard sample indices
     (the selected rows of :func:`_batch_indices`' draw). Composed into one
     flat gather so no [K, shard] intermediate is materialized.
+
+    The composed flat index ``cidx * S + bidx`` needs log2(N·S) bits: at
+    population scale (N·S > 2^31, e.g. 2^26 clients × 64-sample shards) the
+    int32 arithmetic silently wraps negative and gathers garbage rows. Since
+    int64 indices need the x64 mode the rest of the engine does not run
+    under, such populations take a two-stage per-client gather instead
+    (client row, then in-shard take) — the [K, S, ...] intermediate it may
+    materialize is small exactly in the huge-N/modest-S regime that
+    overflows. ``two_stage`` forces the choice (tests pin path equality);
+    the default decides statically from the shapes.
     """
     n, s = y.shape
+    if two_stage is None:
+        two_stage = _needs_two_stage_gather(n, s)
+    if two_stage:
+        xb = jax.vmap(lambda c, b: jnp.asarray(x)[c][b])(cidx, bidx)
+        yb = jax.vmap(lambda c, b: jnp.asarray(y)[c][b])(cidx, bidx)
+        return xb, yb
     flat = cidx[:, None] * s + bidx                       # [K, B]
     xb = jnp.reshape(jnp.asarray(x), (n * s,) + x.shape[2:])[flat]
     yb = jnp.reshape(jnp.asarray(y), (n * s,))[flat]
@@ -123,7 +147,7 @@ def _gather_batches(x, y, cidx, bidx):
 
 def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                         method: str, noise_free: bool | None = None,
-                        dense: bool = False):
+                        dense: bool = False, axis_name: str | None = None):
     """Build ``round_fn(point, state, t)``.
 
     Everything structural (N, K, T, batch/local-step counts, subcarriers,
@@ -140,13 +164,31 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
     model-sized work per round). The sweep engine sets it when *every* point
     in a compilation group has ``noise_std == 0``; a traced ``noise_std``
     stays live otherwise.
+
+    ``axis_name`` (population sharding, ``core/sharding.py``): the round body
+    runs inside a ``shard_map`` over a clients mesh axis of that name, and
+    ``data`` holds THIS shard's client rows while ``fl.num_clients`` stays
+    the global N. The control plane (channels, selection scores, λ, energy,
+    availability, batch indices) is drawn replicated at full [N] exactly as
+    in the unsharded program — bit-identical O(N) scalars — while the
+    model-sized per-client work (local SGD stacks, gradients, losses, the
+    test eval) runs on the local rows and eq. (10) becomes a local weighted
+    partial-sum + ``psum`` (``aircomp.aircomp_psum_tree``). Dense/GCA rounds
+    only: the selected-K gather path stays single-device.
     """
     x, y, x_test, y_test = data
     n = fl.num_clients
     shard = y.shape[1]
     if noise_free is None:
         noise_free = fl.noise_std == 0
+    pop = axis_name is not None
     sparse = (method in EXACT_K_METHODS) and not dense
+    if pop and sparse:
+        raise ValueError(
+            "population sharding runs the dense [N, model] reference "
+            "program; build with dense=True (the selected-K gather path "
+            "stays single-device)")
+    n_local = y.shape[0]  # == n unless population-sharded
     grad_fn = jax.grad(model.loss)
     vloss = jax.vmap(model.loss, in_axes=(None, 0, 0))
     vacc = jax.vmap(model.accuracy, in_axes=(None, 0, 0))
@@ -173,6 +215,20 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         return wc
 
     temporal = fl.temporal
+
+    def sample_batches(key):
+        """One batch per client — local rows [n_local, B, ...] under
+        population sharding, the full [N, B, ...] otherwise. The [N, B]
+        index draw is ALWAYS full-N and replicated (same key, same shape on
+        every device), so sharded and unsharded programs consume ``k_batch``
+        identically; only the gather is local."""
+        if not pop:
+            return _sample_batches(key, x, y, fl.batch_size)
+        bidx = local_slice(_batch_indices(key, n, shard, fl.batch_size),
+                           axis_name, n_local)
+        xb = jax.vmap(lambda xc, ic: xc[ic])(x, bidx)
+        yb = jax.vmap(lambda yc, ic: yc[ic])(y, bidx)
+        return xb, yb
 
     def round_fn(point, state: SimState, t):
         key, k_chan, k_sel, k_batch, k_noise, k_asel, k_abatch = jax.random.split(state.key, 7)
@@ -205,13 +261,18 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             # recomputed inside local_update (the former double-work bug:
             # two identical _sample_batches(k_batch, ...) draws feeding two
             # identical per-client gradient computations).
-            xb, yb = _sample_batches(k_batch, x, y, fl.batch_size)
+            xb, yb = sample_batches(k_batch)
             grads0 = vgrad_clients(state.w, xb, yb)
             gnorms = jax.vmap(
                 lambda g: jnp.sqrt(
                     sum(jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(g))
                 )
             )(grads0)
+            if pop:
+                # the per-client probe ran on local rows; GCA's threshold
+                # statistics (mean/median) are population-wide, so gather
+                # the O(N) norms back to the replicated control plane
+                gnorms = all_gather_axis(gnorms, axis_name)
             mask = select_clients("gca", k_sel, state.lam, h, fl.clients_per_round,
                                   grad_norms=gnorms, gca=point.gca,
                                   avail=eligible)
@@ -219,6 +280,13 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             mask, sel_idx = select_clients_sparse(
                 method, k_sel, state.lam, h, fl.clients_per_round,
                 C=point.energy_C, avail=eligible)
+        elif pop:
+            # exact-K on the sharded population: local top-k per shard, then
+            # a global top-k over the K·n_shards candidates — equal to the
+            # dense lax.top_k by construction (ties pinned to lowest index)
+            mask, _ = select_clients_pop(
+                method, k_sel, state.lam, h, fl.clients_per_round, n_local,
+                axis_name, C=point.energy_C, avail=eligible)
         else:
             mask = select_clients(method, k_sel, state.lam, h,
                                   fl.clients_per_round, C=point.energy_C,
@@ -232,6 +300,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         # ---- local updates + AirComp aggregation (eq. 10)
         eta = point.lr0 * (point.lr_decay ** t)
         noise_std = 0.0 if noise_free else scen.noise_std
+        # under population sharding the update stacks are [n_local, model]
+        # and eq. (10) is the local partial-sum + psum; the AWGN key/leaf
+        # discipline is shared with the dense reference either way
+        mask_l = local_slice(mask, axis_name, n_local) if pop else mask
         if method == "gca":
             # SGD step 1 reuses the probe gradients (same batch, same w)
             w1 = jax.vmap(
@@ -242,8 +314,12 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                                    in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
             else:
                 w_stack = w1
-            w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
-                                           k_denom)
+            if pop:
+                w_new = aircomp_psum_tree(w_stack, mask_l, k_noise, noise_std,
+                                          k_denom, axis_name)
+            else:
+                w_new = aircomp_aggregate_tree(w_stack, mask, k_noise,
+                                               noise_std, k_denom)
         elif sparse:
             # gather-compute-scatter: only the K selected clients descend
             bidx = _batch_indices(k_batch, n, shard, fl.batch_size)
@@ -254,11 +330,15 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             w_new = aircomp_aggregate_stack_tree(w_sel, sel_w, k_noise,
                                                  noise_std, k_denom)
         else:
-            xb, yb = _sample_batches(k_batch, x, y, fl.batch_size)
+            xb, yb = sample_batches(k_batch)
             w_stack = jax.vmap(local_update,
                                in_axes=(None, None, 0, 0))(state.w, eta, xb, yb)
-            w_new = aircomp_aggregate_tree(w_stack, mask, k_noise, noise_std,
-                                           k_denom)
+            if pop:
+                w_new = aircomp_psum_tree(w_stack, mask_l, k_noise, noise_std,
+                                          k_denom, axis_name)
+            else:
+                w_new = aircomp_aggregate_tree(w_stack, mask, k_noise,
+                                               noise_std, k_denom)
         if temporal or method == "gca":
             # the scheduled set can be EMPTY (battery/availability gating, or
             # GCA's thresholding): the PS then receives nothing over the air
@@ -302,21 +382,32 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             xd, yd = _gather_batches(x, y, sel_idx, abidx[sel_idx])
             sel_loss = jnp.sum(mask[sel_idx] * vloss(w_new, xd, yd)) / k_denom
         else:
-            xab, yab = _sample_batches(k_abatch, x, y, fl.batch_size)
+            xab, yab = sample_batches(k_abatch)
             losses = vloss(w_new, xab, yab)
+            if pop:
+                # per-client losses computed on local rows; λ's ascent and
+                # the selected-set loss metric live on the replicated [N]
+                # control plane, so gather them back in client order
+                losses = all_gather_axis(losses, axis_name)
             sel_loss = jnp.sum(mask * losses) / k_denom
         lam_new = lambda_ascent(state.lam, losses, amask, point.ascent_lr)
 
         # ---- metrics: the full N-client test-set eval runs on the
         # eval_every cadence (forward-filled in between); everything else is
         # O(N) scalars and stays per-round.
-        if fl.eval_every == 1:
+        def eval_accs():
+            """Full test eval: per-client accuracy over the local rows (the
+            sharded O(N·test) work), gathered to [N] for the stats."""
             accs = vacc(w_new, x_test, y_test)
+            return all_gather_axis(accs, axis_name) if pop else accs
+
+        if fl.eval_every == 1:
+            accs = eval_accs()
             stats = jnp.stack([jnp.mean(accs), jnp.min(accs), jnp.std(accs)])
             eval_cache = state.eval_cache  # the leaf-less ()
         else:
             def fresh_eval(_):
-                accs = vacc(w_new, x_test, y_test)
+                accs = eval_accs()
                 return jnp.stack([jnp.mean(accs), jnp.min(accs),
                                   jnp.std(accs)])
 
@@ -385,14 +476,26 @@ def run_simulation(
     data,
     seed: Optional[int] = None,
     dense: bool = False,
+    mesh=None,
 ) -> SimHistory:
     """Run T rounds of Algorithm 1 (or a baseline, per fl.method).
 
     ``dense=True`` forces the [N, model] reference path (differential tests
     and benchmarks; exact-K methods default to the sparse gather path).
+
+    ``mesh`` (a 1-D ``jax.sharding.Mesh``, see ``sharding.client_mesh``)
+    shards the client population across its devices: dense/GCA rounds and
+    the full N-client eval run with per-client state split over the mesh and
+    eq. (10) as a cross-device ``psum``. A mesh of size 1 (or None) is a
+    structural no-op — this function compiles exactly the single-device
+    program.
     """
     from repro.core.sweep import sweep_point_from_config  # local: avoid cycle
 
+    if mesh is not None and mesh.size > 1:
+        from repro.core.sharding import run_simulation_sharded
+        return run_simulation_sharded(model, fl, data, mesh, seed=seed,
+                                      dense=True)
     seed = fl.seed if seed is None else seed
     point = sweep_point_from_config(fl)
     state = init_sim_state(model, fl, jax.random.PRNGKey(seed),

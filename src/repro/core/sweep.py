@@ -38,7 +38,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
 from repro.configs.base import FLConfig, GCAParams
+from repro.core import sharding
 from repro.core.channel import SCENARIOS, scenario_from_config
 from repro.core.dynamics import ChannelProcess, process_from_config
 from repro.core.simulator import (SimHistory, init_sim_state,
@@ -181,7 +185,7 @@ def _stack_points(points: Sequence[SweepPoint]) -> SweepPoint:
 
 
 def _build_runner(model, fl_static: FLConfig, data, method: str,
-                  noise_free: bool, model_size: int):
+                  noise_free: bool, model_size: int, mesh=None):
     """Two jitted executables: an initializer ``(points [S], seeds [R]) ->
     SimState`` stack with leading [S, R] axes, and the runner ``(points,
     states) -> (final states, SimHistory)``.
@@ -192,6 +196,14 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
     — returning the final states (same shapes) is what gives XLA the
     input→output aliasing that makes the donation effective (and warning-
     free, which ``tests/test_sweep.py`` asserts).
+
+    ``mesh`` (sweep-cell sharding, ``core/sharding.py``): both executables
+    are wrapped in ``shard_map`` splitting the SEED axis over the ``cells``
+    mesh — each device initializes and scans its own [S, R/D] block of
+    fully-independent cells, so results are bit-identical to the
+    single-device program (no cross-cell reduction exists anywhere).
+    ``mesh=None`` / size 1 skips the wrapping entirely: today's exact
+    programs.
     """
     round_fn = make_param_round_fn(model, fl_static, data, model_size, method,
                                    noise_free=noise_free)
@@ -218,7 +230,44 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
         over_seeds = jax.vmap(run_one, in_axes=(None, 0))
         return jax.vmap(over_seeds, in_axes=(0, 0))(points, states)
 
+    if mesh is not None and mesh.size > 1:
+        P = PartitionSpec
+        cell = mesh.axis_names[0]
+        # points [S, ...] replicated; states/histories [S, R, ...] split on
+        # the seed axis. R % mesh.size == 0 is guaranteed by run_sweep's
+        # seed padding.
+        init_batched = shard_map(init_batched, mesh=mesh,
+                                 in_specs=(P(), P(cell)),
+                                 out_specs=P(None, cell), check_rep=False)
+        batched = shard_map(batched, mesh=mesh,
+                            in_specs=(P(), P(None, cell)),
+                            out_specs=(P(None, cell), P(None, cell)),
+                            check_rep=False)
     return jax.jit(init_batched), jax.jit(batched, donate_argnums=(1,))
+
+
+def _grid_fingerprint(specs, seeds) -> np.ndarray:
+    """A [32] uint8 digest of the full grid — labels, every config field
+    (traced knobs included), seed list and order. Stored inside the resume
+    checkpoint so a rerun whose grid differs in ANY way (reordered specs, a
+    changed learning rate under the same label, different seeds) fails
+    loudly instead of resuming stale or misattributed histories; the 'done'
+    flags are positional and only safe under an identical grid."""
+    import hashlib
+
+    desc = repr([(lbl, fl) for lbl, fl in specs]) + repr(tuple(seeds))
+    return np.frombuffer(hashlib.sha256(desc.encode()).digest(), np.uint8)
+
+
+def _history_template(fl: FLConfig, num_seeds: int) -> SimHistory:
+    """Zero-filled [R, T(, N)] SimHistory with the shapes/dtypes run_sweep
+    produces — the restore template of the checkpoint resume hook."""
+    r, t, n = num_seeds, fl.rounds, fl.num_clients
+    z = lambda *shape: np.zeros(shape, np.float32)  # noqa: E731
+    return SimHistory(avg_acc=z(r, t), worst_acc=z(r, t), std_acc=z(r, t),
+                      energy=z(r, t), loss=z(r, t), num_scheduled=z(r, t),
+                      lam=z(r, t, n), avail_count=z(r, t),
+                      min_battery=z(r, t))
 
 
 def run_sweep(
@@ -226,38 +275,104 @@ def run_sweep(
     data,
     specs: Sequence[Tuple[str, FLConfig]],
     seeds: Sequence[int] = (0,),
+    devices=None,
+    checkpoint_dir: Optional[str] = None,
 ) -> "SweepResult":
     """Run every (spec × seed) cell; one compilation per structural group.
 
     ``specs`` is ``[(label, FLConfig), ...]`` (see :func:`expand_grid`).
     Returns a :class:`SweepResult` whose per-label histories have a leading
     seed axis [R] on every leaf.
+
+    ``devices`` shards the grid's seed axis over a ``cells`` device mesh
+    (``None`` = single device, today's exact program; ``"auto"`` = every
+    local device; an int caps the count). Cells are independent, so the
+    sharded sweep is bit-identical to the unsharded one — the seed list is
+    padded up to a multiple of the mesh size internally and the padding
+    columns discarded.
+
+    ``checkpoint_dir`` (opt-in resume for long grids): after each
+    compilation group completes, the per-label histories land in a
+    ``repro.checkpoint`` msgpack checkpoint; a rerun with the same specs,
+    seeds and directory restores the finished groups and computes only the
+    rest. Shape validation comes from the fixed restore template, so a
+    changed grid (different seeds/rounds/N) fails loudly instead of
+    resuming garbage.
     """
     labels = [lbl for lbl, _ in specs]
     if len(set(labels)) != len(labels):
         raise ValueError(f"duplicate sweep labels: {labels}")
-    seeds_arr = jnp.asarray(tuple(seeds), jnp.int32)
+
+    n_dev = sharding.resolve_device_count(devices)
+    mesh = sharding.cell_mesh(n_dev) if n_dev > 1 else None
+    num_seeds = len(tuple(seeds))
+    run_seeds = (sharding.pad_to_multiple(list(seeds), n_dev)
+                 if n_dev > 1 else list(seeds))
+    seeds_arr = jnp.asarray(tuple(run_seeds), jnp.int32)
 
     groups: dict[Tuple, list[int]] = {}
     for i, (_, fl) in enumerate(specs):
         groups.setdefault(_static_signature(fl), []).append(i)
 
-    model_size = tree_size(model.init(jax.random.PRNGKey(0)))
+    # ---- checkpoint resume hook (opt-in) -------------------------------
+    done = np.zeros((len(specs),), np.float32)
+    ckpt_template = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                           save_checkpoint)
+        ckpt_template = {
+            "done": np.zeros((len(specs),), np.float32),
+            "grid": _grid_fingerprint(specs, seeds),
+            "hist": {lbl: _history_template(fl, num_seeds)
+                     for lbl, fl in specs},
+        }
+
     histories: list[Optional[SimHistory]] = [None] * len(specs)
+    if checkpoint_dir is not None and latest_step(checkpoint_dir) is not None:
+        restored = restore_checkpoint(checkpoint_dir, ckpt_template)
+        if not np.array_equal(np.asarray(restored["grid"]),
+                              ckpt_template["grid"]):
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir} was written by a different "
+                "sweep grid (labels/configs/seeds changed or reordered) — "
+                "resuming would misattribute histories; point "
+                "checkpoint_dir elsewhere or delete the stale checkpoint")
+        done = np.asarray(restored["done"]).copy()
+        for i, lbl in enumerate(labels):
+            if done[i]:
+                histories[i] = restored["hist"][lbl]
+
+    model_size = tree_size(model.init(jax.random.PRNGKey(0)))
+    groups_done = sum(
+        1 for idxs in groups.values() if all(done[i] for i in idxs))
     for idxs in groups.values():
+        if all(done[i] for i in idxs):
+            continue  # restored from the checkpoint
         fl0 = specs[idxs[0]][1]
         points = _stack_points(
             [sweep_point_from_config(specs[i][1]) for i in idxs])
         # elide the eq.-(10) noise draw only if the whole group is noise-free
         noise_free = all(specs[i][1].noise_std == 0 for i in idxs)
         init_fn, runner = _build_runner(model, fl0, data, fl0.method,
-                                        noise_free, model_size)
-        states = init_fn(points, seeds_arr)  # leaves [S_group, R, ...]
+                                        noise_free, model_size, mesh=mesh)
+        states = init_fn(points, seeds_arr)  # leaves [S_group, R_pad, ...]
         # final states are discarded; returning them is what lets XLA alias
         # the donated inputs (see _build_runner)
-        _, hist = runner(points, states)  # hist leaves [S_group, R, T, ...]
+        _, hist = runner(points, states)  # hist leaves [S_group, R_pad, T, ..]
         for s, i in enumerate(idxs):
-            histories[i] = jax.tree.map(lambda x: x[s], hist)
+            # drop the seed-padding columns of a sharded run
+            histories[i] = jax.tree.map(lambda x: x[s, :num_seeds], hist)
+            done[i] = 1.0
+        if checkpoint_dir is not None:
+            groups_done += 1
+            tree = {
+                "done": done,
+                "grid": ckpt_template["grid"],
+                "hist": {lbl: (histories[i] if done[i] else
+                               ckpt_template["hist"][lbl])
+                         for i, (lbl, _) in enumerate(specs)},
+            }
+            save_checkpoint(checkpoint_dir, groups_done, tree, keep=1)
 
     return SweepResult(
         labels=labels,
@@ -305,17 +420,31 @@ class SweepResult:
         return jax.tree.map(lambda x: x.mean(0), self.history(label))
 
     def summary(self, window: int = 10) -> dict:
-        """Per-label statistics over the final ``window`` rounds.
+        """Per-label statistics over the final ``window`` *evaluated* rounds.
 
         mean/std across seeds for avg/worst accuracy, the worst-case (min
         over seeds) worst-client accuracy, and final cumulative energy.
+
+        Under ``eval_every = E > 1`` the accuracy columns between evals are
+        forward-filled copies of the last eval; a naive tail window would
+        count each fresh eval up to E times and bias the statistic toward
+        whichever eval happens to sit closest to the end. The accuracy
+        window therefore ranges over the label's actual eval rounds
+        (``t % E == 0``) only — at E=1 that is exactly the old behavior,
+        and an E>1 summary equals the E=1 summary computed on the
+        subsampled eval cadence. Per-round quantities (scheduled counts,
+        availability) are genuine every round and keep the plain tail
+        window.
         """
         out = {}
         for lbl in self.labels:
             h = self.history(lbl)
-            avg = np.asarray(h.avg_acc)[:, -window:].mean(1)     # [R]
-            worst = np.asarray(h.worst_acc)[:, -window:].mean(1)  # [R]
-            std = np.asarray(h.std_acc)[:, -window:].mean(1)     # [R]
+            cfg = self.configs[self._by_label[lbl]]
+            rounds = np.asarray(h.avg_acc).shape[1]
+            eval_idx = np.arange(0, rounds, max(1, cfg.eval_every))[-window:]
+            avg = np.asarray(h.avg_acc)[:, eval_idx].mean(1)     # [R]
+            worst = np.asarray(h.worst_acc)[:, eval_idx].mean(1)  # [R]
+            std = np.asarray(h.std_acc)[:, eval_idx].mean(1)     # [R]
             energy = np.asarray(h.energy)[:, -1]                 # [R]
             sched = np.asarray(h.num_scheduled)[:, -window:].mean(1)  # [R]
             avail = np.asarray(h.avail_count)[:, -window:].mean(1)    # [R]

@@ -60,10 +60,18 @@ class ParameterServer:
 
     def __init__(self, model, optimizer, fl: FLConfig, *, ctx=None,
                  jit_round: bool = True, seed: int = 0,
-                 reuse_probe_grads: bool = True):
+                 reuse_probe_grads: bool = True, mesh=None):
         self.model = model
         self.fl = fl
         self.key = jax.random.PRNGKey(seed)
+        # Population sharding on the production tier (core/sharding.py): a
+        # 1-D clients mesh makes step() place each batch with its example
+        # axis split across the devices, so the jitted round's per-client
+        # block compute (and the GCA probe's [N, P] gradient stack)
+        # partitions under XLA's SPMD pass. Placement metadata only — the
+        # compiled program's semantics are unchanged, and mesh=None (or
+        # size 1) is a no-op.
+        self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
         self.round_fn = make_fl_round(
             model, optimizer, fl.num_clients, fl.clients_per_round,
             noise_std=fl.noise_std, ctx=ctx)
@@ -193,6 +201,12 @@ class ParameterServer:
         fl = self.fl
         if self._model_size is None:
             self._model_size = tree_size(state.params)
+        if self.mesh is not None:
+            # split the example axis over the clients mesh BEFORE the layout
+            # checks/jit below — the device_put is lazy placement metadata,
+            # the host-side np.asarray reads are unaffected
+            from repro.core.sharding import shard_batch
+            batch = shard_batch(batch, self.mesh)
         # identical role order to the simulator round (see module docstring);
         # k_batch/k_abatch are the simulator's data-sampling keys, unused here
         (self.key, k_chan, k_sel, _k_batch, k_noise, k_asel,

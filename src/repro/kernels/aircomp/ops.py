@@ -2,7 +2,10 @@
 
 On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
 it runs in interpret mode for correctness work, falling back to the jnp
-oracle for speed when ``interpret=False`` is requested off-TPU.
+oracle for speed when ``interpret=False`` is requested off-TPU. The Pallas
+kernel accumulates in f32 only: buffers wider than f32 (float64 models) are
+routed to the dtype-preserving jnp oracle regardless of backend, so enabling
+x64 never silently truncates through the kernel.
 """
 from __future__ import annotations
 
@@ -28,6 +31,9 @@ def aircomp_aggregate_flat(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
     """
     if use_pallas is None:
         use_pallas = on_tpu()
+    if jnp.dtype(x.dtype).itemsize > 4:
+        # f64 accumulation: the Pallas kernel is f32-only — keep precision
+        use_pallas = False
     if use_pallas:
         return aircomp_pallas(x, w, z, noise_std=noise_std, k=k,
                               interpret=not on_tpu())

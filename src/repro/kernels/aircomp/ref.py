@@ -4,6 +4,10 @@ y[m] = ( sum_i w_i * x[i, m] + noise_std * z[m] ) / k
 
 w_i folds the selection mask and any per-client gain (perfect channel
 inversion => gain 1; imperfect-inversion ablations pass |h_i|/h_hat_i).
+Accumulation runs at the input buffer's dtype, never narrower than f32 —
+float64 stacks aggregate at full precision instead of being squeezed
+through f32 (the per-leaf reference path never did that, and the fused
+path must match it).
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import jax.numpy as jnp
 
 def aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
                 noise_std: float, k: float) -> jnp.ndarray:
-    """x [N, M]; w [N]; z [M] -> [M] in fp32."""
-    acc = jnp.einsum("nm,n->m", x.astype(jnp.float32), w.astype(jnp.float32))
-    return (acc + noise_std * z.astype(jnp.float32)) / k
+    """x [N, M]; w [N]; z [M] -> [M] at max(x.dtype, f32) precision."""
+    acc_t = jnp.result_type(x.dtype, jnp.float32)
+    acc = jnp.einsum("nm,n->m", x.astype(acc_t), w.astype(acc_t))
+    return (acc + noise_std * z.astype(acc_t)) / k

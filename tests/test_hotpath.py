@@ -294,3 +294,90 @@ def test_server_gca_probe_reuse_matches_dense_round(hot_data):
                       jax.tree_util.tree_leaves(b.params)):
         np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4 satellites: wide-index gather + widest-dtype aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_gather_batches_two_stage_matches_composed(key):
+    """The two paths of ``_gather_batches`` (composed flat gather vs the
+    two-stage per-client fallback for N·S > int32) are interchangeable."""
+    from repro.core.simulator import _batch_indices, _gather_batches
+
+    n, s, b, d = 10, 7, 4, 3
+    x = jax.random.normal(key, (n, s, d))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n, s), 0, 10)
+    cidx = jnp.asarray([8, 2, 5, 2])
+    bidx = _batch_indices(jax.random.fold_in(key, 2), n, s, b)[cidx]
+    x1, y1 = _gather_batches(x, y, cidx, bidx, two_stage=False)
+    x2, y2 = _gather_batches(x, y, cidx, bidx, two_stage=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_gather_batches_wide_index_dispatch():
+    """N·S beyond int32 must route to the two-stage gather: the composed
+    ``cidx * S + bidx`` flat index silently wraps negative in int32 (the
+    regression this pins), and int64 indices would need the x64 mode the
+    engine does not run under."""
+    from repro.core.simulator import _needs_two_stage_gather
+
+    # the bug, reproduced at synthetic shapes: client 9 of a population with
+    # S = 2^28-sized shards composes to 9·2^28 + 5 > 2^31 → wraps negative
+    with np.errstate(over="ignore"):
+        wrapped = np.int32(9) * np.int32(2 ** 28) + np.int32(5)
+    assert wrapped < 0  # the silent int32 overflow the old code shipped
+
+    # the static dispatch predicate at synthetic populations just over the
+    # boundary (no N·S-sized allocation needed — it reads only the shapes)
+    assert not _needs_two_stage_gather(100, 20)           # the paper's scale
+    assert not _needs_two_stage_gather(2 ** 26, 2 ** 5 - 1)
+    assert not _needs_two_stage_gather(2 ** 16, 2 ** 15)  # N·S-1 == int32max
+    assert _needs_two_stage_gather(2 ** 16, 2 ** 15 + 1)  # one past it
+    assert _needs_two_stage_gather(2 ** 26, 2 ** 6)       # huge-N regime
+
+
+def test_aircomp_stack_tree_preserves_float64(key):
+    """The fused flat path used to ravel every leaf through f32, silently
+    halving a float64 model's mantissa; it must aggregate at the widest
+    leaf dtype like the per-leaf reference."""
+    from repro.core.aircomp import stack_accum_dtype
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        trees = {
+            "w": jax.random.normal(k1, (6, 17), dtype=jnp.float64),
+            "b": jax.random.normal(k2, (6, 5), dtype=jnp.float64),
+        }
+        assert stack_accum_dtype(jax.tree_util.tree_leaves(trees)) == jnp.float64
+        weights = (jax.random.uniform(k3, (6,)) > 0.3).astype(jnp.float64)
+        knoise = jax.random.fold_in(k1, 9)
+        k_denom = jnp.maximum(weights.sum(), 1.0)
+        for noise_std in (0.0, 0.25):
+            ref = aircomp_aggregate_tree(trees, weights, knoise, noise_std,
+                                         k_denom)
+            fused = aircomp_aggregate_stack_tree(trees, weights, knoise,
+                                                 noise_std, k_denom)
+            for name in ("w", "b"):
+                assert fused[name].dtype == jnp.float64, name
+                # f64-tight: an f32-raveled path errs at ~1e-8 and fails this
+                np.testing.assert_allclose(np.asarray(fused[name]),
+                                           np.asarray(ref[name]),
+                                           rtol=1e-12, atol=1e-13,
+                                           err_msg=name)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_aircomp_stack_tree_mixed_dtype_casts_back(key):
+    """bf16 leaves keep f32 accumulation and return as bf16."""
+    trees = {"w": jax.random.normal(key, (5, 12)).astype(jnp.bfloat16),
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (5, 3))}
+    weights = jnp.ones((5,))
+    out = aircomp_aggregate_stack_tree(trees, weights, jax.random.PRNGKey(0),
+                                       0.0, 5.0)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["b"].dtype == jnp.float32

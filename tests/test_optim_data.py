@@ -93,6 +93,47 @@ def test_checkpoint_roundtrip(tmp_path, key):
     assert int(restored["opt"]["step"]) == 7
 
 
+def test_checkpoint_restore_is_writeable_and_donatable(tmp_path, key):
+    """Regression (ISSUE 4): ``restore_checkpoint`` used to hand back
+    read-only ``np.frombuffer`` views — in-place mutation raised and
+    donating them to a jitted update step aliased unowned storage."""
+    tree = {"w": jax.random.normal(key, (4, 5)),
+            "step": jnp.asarray(7, jnp.int32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    restored = restore_checkpoint(str(tmp_path), tree)
+    # mutate in place: the read-only view raised ValueError here
+    restored["w"][0, 0] = 42.0
+    assert restored["w"][0, 0] == 42.0
+    # donate into a jitted step: must neither raise nor corrupt the result
+    restored = restore_checkpoint(str(tmp_path), tree)
+    bumped = jax.jit(
+        lambda t: jax.tree.map(lambda x: x + 1, t), donate_argnums=0
+    )(restored)
+    np.testing.assert_allclose(np.asarray(bumped["w"]),
+                               np.asarray(tree["w"]) + 1, rtol=1e-6)
+
+
+def test_checkpoint_restore_validates_dtype(tmp_path, key):
+    """A template whose dtype disagrees with the stored bytes must raise —
+    the old code reinterpreted/absorbed the bytes silently."""
+    tree = {"w": jax.random.normal(key, (4, 5))}  # f32 on disk
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad_template = {"w": np.zeros((4, 5), np.float64)}
+    try:
+        restore_checkpoint(str(tmp_path), bad_template)
+        raise AssertionError("dtype mismatch not detected")
+    except ValueError as e:
+        assert "dtype mismatch" in str(e)
+
+
+def test_checkpoint_restore_accepts_scalar_template(tmp_path):
+    """Dtype-less Python-scalar template leaves carry no width intent and
+    must keep restoring (NumPy would infer int64/float64 for them)."""
+    save_checkpoint(str(tmp_path), 1, {"step": jnp.asarray(7, jnp.int32)})
+    restored = restore_checkpoint(str(tmp_path), {"step": 0})
+    assert int(restored["step"]) == 7
+
+
 def test_checkpoint_retention(tmp_path, key):
     tree = {"w": jnp.zeros(2)}
     for step in range(6):
