@@ -25,6 +25,7 @@ import platform
 import subprocess
 import sys
 import time
+from dataclasses import replace
 from pathlib import Path
 
 import jax
@@ -138,6 +139,30 @@ def main():
 
     payload["speedup_n100"] = payload["cells"]["n100"]["speedup_hot_path"]
 
+    # ---- per-transport round throughput (N=100 hot path): the fused
+    # quantize-aggregate pass must not tax the round — acceptance floor is
+    # quantized >= 0.8x analog rounds/sec; digital is recorded for the
+    # energy-accounting trajectory (its aggregation is the noise-free mean)
+    data = _data(100)
+    fl = FLConfig(num_clients=100, clients_per_round=K, rounds=40,
+                  batch_size=50, method="ca_afl")
+    tcells = {}
+    for tr in ("analog", "quantized", "digital"):
+        row = bench_cell(model, replace(fl, transport=tr), data, dense=False)
+        tcells[tr] = row
+        print(f"[perf_bench] transport {tr:10s} "
+              f"{row['rounds_per_second']:8.2f} rounds/s  "
+              f"compile {row['compile_seconds']:.2f}s")
+    tcells["quantized_vs_analog"] = (
+        tcells["quantized"]["rounds_per_second"]
+        / tcells["analog"]["rounds_per_second"])
+    tcells["digital_vs_analog"] = (
+        tcells["digital"]["rounds_per_second"]
+        / tcells["analog"]["rounds_per_second"])
+    payload["cells"]["transports_n100"] = tcells
+    print(f"[perf_bench] quantized transport at "
+          f"{tcells['quantized_vs_analog']:.2f}x analog throughput")
+
     # ---- sharded-sweep scale-out cell (subprocess: needs its own 8-device
     # host platform, which must not leak into the cells above) -------------
     try:
@@ -172,6 +197,12 @@ def main():
         raise SystemExit(
             f"hot-path regression: speedup_n100 = "
             f"{payload['speedup_n100']:.2f}x < 3x acceptance floor")
+    q_ratio = payload["cells"]["transports_n100"]["quantized_vs_analog"]
+    if q_ratio < 0.8:
+        raise SystemExit(
+            f"quantized-transport regression: {q_ratio:.2f}x analog round "
+            "throughput < 0.8x acceptance floor (fused quantize-aggregate "
+            "pass is taxing the round)")
     shard = payload["cells"]["sharded_sweep"]
     if (shard["cpu_count"] or 0) >= 8 and shard["speedup_devices8"] < 3.0:
         raise SystemExit(

@@ -145,6 +145,17 @@ class FLConfig:
     # scenario heterogeneity beyond the paper (0 => the paper's i.i.d. setup)
     shadowing_std: float = 0.0      # log-normal shadowing std per coherence block
     pathloss_db_spread: float = 0.0  # per-client large-scale gain spread (dB)
+    # uplink transport scheme (repro.core.transport). `transport` is
+    # STRUCTURAL: it selects the aggregation/energy program (analog AirComp /
+    # stochastic-rounding quantized AirComp / digital OFDMA) and joins the
+    # sweep compilation-group signature; the knobs below it are traced
+    # (sweepable) TransportParams data. "analog" compiles to exactly the
+    # pre-transport program.
+    transport: str = "analog"       # analog | quantized | digital
+    quant_bits: float = 8.0         # payload precision (bits per parameter)
+    tx_power: float = 0.1           # digital uplink transmit power P (W)
+    ofdma_bandwidth: float = 1e5    # digital per-client OFDMA subband B (Hz)
+    rx_noise: float = 1e-2          # digital receiver noise+interference (W)
     # temporal scenario dynamics (repro.core.dynamics). `temporal` is
     # STRUCTURAL: it switches the simulator/server onto the stateful
     # ChannelProcess path and joins the sweep compilation-group signature;

@@ -54,7 +54,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core.channel import compose_channel, effective_channel
-from repro.core.energy import transmit_energy
+from repro.core.transport import uplink_energy
 
 
 @dataclass(frozen=True)
@@ -164,8 +164,8 @@ class ProcessStep(NamedTuple):
 
 
 def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
-                 num_clients: int, num_subcarriers: int,
-                 model_size: int) -> ProcessStep:
+                 num_clients: int, num_subcarriers: int, model_size: int,
+                 scheme: str = "analog", tp=None) -> ProcessStep:
     """Evolve fading + availability and price this round's uploads.
 
     The SINGLE implementation of the per-round process tick — the simulator's
@@ -173,13 +173,19 @@ def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
     cannot drift in key streams or gating order. Selection happens between
     this and :func:`commit_process` (which depletes the transmitters'
     batteries into the next carry).
+
+    ``scheme``/``tp`` (``repro.core.transport``): uploads are priced under
+    the configured uplink transport, so battery gating sees the scheme's
+    actual cost — quantized clients afford more rounds at low ``bits``,
+    digital clients pay the OFDMA rate/latency bill. The analog default is
+    eqs. (3-6) verbatim.
     """
     h_mag, fast, log_shadow = evolve_fading(
         k_chan, scenario, process, state, num_clients, num_subcarriers)
     h = effective_channel(h_mag)
     avail = evolve_availability(jax.random.fold_in(k_chan, 3), process,
                                 state.avail)
-    e_need = transmit_energy(h, model_size, scenario.psi, scenario.tau)
+    e_need = uplink_energy(scheme, tp, h, model_size, scenario)
     eligible = avail * (state.battery >= e_need).astype(jnp.float32)
     return ProcessStep(h=h, e_need=e_need, avail=avail, eligible=eligible,
                        fast=fast, log_shadow=log_shadow)

@@ -6,20 +6,42 @@ E~_i^(t) = psi * M * tau / |h_i|^2 (scaling+inversion energy per upload)
 
 Only the channel-inversion component enters scheduling (the symbol power
 reflects the learning procedure and is excluded, per the paper).
+
+These are the ANALOG AirComp expressions; the quantized and digital-OFDMA
+schemes price uploads through ``repro.core.transport.uplink_energy``, which
+delegates here for the analog component.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+# The paper's §IV-A truncation threshold |h| >= 0.05: the channel-inversion
+# power (eq. 5) diverges as h -> 0, so every energy expression clamps at the
+# same floor the channel model truncates at. Channels drawn through
+# ``repro.core.channel`` already satisfy h >= floor (the clamp is then the
+# exact identity); the guard exists for raw callers — a literally-zero (or
+# denormal) channel draw used to yield inf/NaN energy that poisoned battery
+# depletion and greedy scores downstream.
+TRUNCATION_FLOOR = 0.05
 
-def transmit_energy(h_eff: jnp.ndarray, model_size: int, psi: float, tau: float):
-    """Per-client upload energy E~_i (Joules); h_eff: [...] effective channels."""
-    return psi * model_size * tau / jnp.square(h_eff)
+
+def transmit_energy(h_eff: jnp.ndarray, model_size: int, psi: float,
+                    tau: float, floor: float = TRUNCATION_FLOOR):
+    """Per-client upload energy E~_i (Joules); h_eff: [...] effective channels.
+
+    ``floor`` is the deep-fade guard (the scenario's traced truncation
+    threshold where available): energy is priced at max(h, floor), keeping
+    the eq. (5) inversion finite for pathological draws while remaining the
+    identity for any channel the truncated fading model can produce.
+    """
+    return psi * model_size * tau / jnp.square(jnp.maximum(h_eff, floor))
 
 
-def round_energy(h_eff, mask, model_size: int, psi: float, tau: float):
+def round_energy(h_eff, mask, model_size: int, psi: float, tau: float,
+                 floor: float = TRUNCATION_FLOOR):
     """Cumulative energy of the selected set D^(t): E^(t) = sum_{i in D} E~_i.
 
     mask: [N] 0/1 participation indicator.
     """
-    return jnp.sum(mask * transmit_energy(h_eff, model_size, psi, tau))
+    return jnp.sum(mask * transmit_energy(h_eff, model_size, psi, tau,
+                                          floor=floor))

@@ -25,7 +25,13 @@ the scheduled set K, not the population N. For exact-K selection methods
 
 GCA's thresholded scheduled count is unbounded by K, so it stays on the
 dense [N, model] path — which is also kept (``dense=True``) as the reference
-implementation the differential tests pin the sparse path against. The full
+implementation the differential tests pin the sparse path against.
+
+The uplink transport (``repro.core.transport``) is a structural axis of the
+round: ``fl.transport`` selects the aggregation + energy program (analog
+AirComp / quantized AirComp / digital OFDMA) while every scheme knob rides
+traced in ``point.transport`` — the analog program is the pre-transport one
+bit-for-bit. The full
 N-client test-set eval runs every ``fl.eval_every`` rounds (structural knob;
 metrics forward-fill in between). All key consumption is identical across
 the sparse/dense/GCA paths, so masks, channels, λ and energy agree
@@ -56,11 +62,13 @@ from repro.core.channel import draw_channels_scenario, effective_channel
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  process_from_config, step_process)
-from repro.core.energy import round_energy
 from repro.core.selection import (EXACT_K_METHODS, availability_logits,
                                   gumbel_topk, select_clients,
                                   select_clients_pop, select_clients_sparse)
 from repro.core.sharding import all_gather_axis, local_slice
+from repro.core import transport as transport_mod
+from repro.core.transport import (TRANSPORTS, quantized_aggregate_psum_tree,
+                                  quantized_aggregate_stack_tree)
 from repro.models.logreg import SimModel
 from repro.utils.tree import tree_size
 
@@ -183,6 +191,15 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         noise_free = fl.noise_std == 0
     pop = axis_name is not None
     sparse = (method in EXACT_K_METHODS) and not dense
+    # the uplink transport scheme is STRUCTURAL (Python branches below):
+    # "analog" compiles to exactly the pre-transport program, "quantized"
+    # swaps the aggregation for the fused quantize-aggregate pass over
+    # per-client deltas, "digital" statically elides the superposition noise
+    # (orthogonal decode) — every scheme KNOB stays traced in point.transport
+    scheme = fl.transport
+    if scheme not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {scheme!r}; pick one of {TRANSPORTS}")
     if pop and sparse:
         raise ValueError(
             "population sharding runs the dense [N, model] reference "
@@ -216,6 +233,32 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
 
     temporal = fl.temporal
 
+    def aggregate_full(tpt, w_prev, w_stack, mask, mask_l, k_noise,
+                       noise_std, k_denom):
+        """Transport-dispatched eq. (10) over a full [n(_local), model]
+        update stack (the dense/GCA and population-sharded paths). Analog
+        compiles to exactly the pre-transport per-leaf/psum calls; digital
+        statically drops the AWGN (orthogonal decode); quantized aggregates
+        stochastically-rounded per-client deltas, with global client ids
+        addressing the rounding streams so sharded rows quantize identically
+        to dense ones."""
+        if scheme == "quantized":
+            if pop:
+                ids = (jax.lax.axis_index(axis_name) * n_local
+                       + jnp.arange(n_local))
+                return quantized_aggregate_psum_tree(
+                    w_prev, w_stack, mask_l, ids, k_noise, noise_std,
+                    tpt.bits, k_denom, axis_name)
+            return quantized_aggregate_stack_tree(
+                w_prev, w_stack, mask, jnp.arange(n), k_noise, noise_std,
+                tpt.bits, k_denom)
+        eff_noise = 0.0 if scheme == "digital" else noise_std
+        if pop:
+            return aircomp_psum_tree(w_stack, mask_l, k_noise, eff_noise,
+                                     k_denom, axis_name)
+        return aircomp_aggregate_tree(w_stack, mask, k_noise, eff_noise,
+                                      k_denom)
+
     def sample_batches(key):
         """One batch per client — local rows [n_local, B, ...] under
         population sharding, the full [N, B, ...] otherwise. The [N, B]
@@ -244,7 +287,8 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         if temporal:
             cs = state.chan_state
             pstep = step_process(k_chan, scen, proc, cs, n,
-                                 fl.num_subcarriers, model_size)
+                                 fl.num_subcarriers, model_size,
+                                 scheme=scheme, tp=point.transport)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
         else:
             h = effective_channel(
@@ -314,12 +358,8 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                                    in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
             else:
                 w_stack = w1
-            if pop:
-                w_new = aircomp_psum_tree(w_stack, mask_l, k_noise, noise_std,
-                                          k_denom, axis_name)
-            else:
-                w_new = aircomp_aggregate_tree(w_stack, mask, k_noise,
-                                               noise_std, k_denom)
+            w_new = aggregate_full(point.transport, state.w, w_stack, mask,
+                                   mask_l, k_noise, noise_std, k_denom)
         elif sparse:
             # gather-compute-scatter: only the K selected clients descend
             bidx = _batch_indices(k_batch, n, shard, fl.batch_size)
@@ -327,18 +367,22 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             w_sel = jax.vmap(local_update,
                              in_axes=(None, None, 0, 0))(state.w, eta, xb_s, yb_s)
             sel_w = mask[sel_idx]  # 0 for availability/battery-gated slots
-            w_new = aircomp_aggregate_stack_tree(w_sel, sel_w, k_noise,
-                                                 noise_std, k_denom)
+            if scheme == "quantized":
+                # sel_idx addresses the rounding streams, so the K gathered
+                # rows quantize bit-identically to the dense [N] program's
+                w_new = quantized_aggregate_stack_tree(
+                    state.w, w_sel, sel_w, sel_idx, k_noise, noise_std,
+                    point.transport.bits, k_denom)
+            else:
+                w_new = aircomp_aggregate_stack_tree(
+                    w_sel, sel_w, k_noise,
+                    0.0 if scheme == "digital" else noise_std, k_denom)
         else:
             xb, yb = sample_batches(k_batch)
             w_stack = jax.vmap(local_update,
                                in_axes=(None, None, 0, 0))(state.w, eta, xb, yb)
-            if pop:
-                w_new = aircomp_psum_tree(w_stack, mask_l, k_noise, noise_std,
-                                          k_denom, axis_name)
-            else:
-                w_new = aircomp_aggregate_tree(w_stack, mask, k_noise,
-                                               noise_std, k_denom)
+            w_new = aggregate_full(point.transport, state.w, w_stack, mask,
+                                   mask_l, k_noise, noise_std, k_denom)
         if temporal or method == "gca":
             # the scheduled set can be EMPTY (battery/availability gating, or
             # GCA's thresholding): the PS then receives nothing over the air
@@ -349,8 +393,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             w_new = jax.tree.map(
                 lambda agg, old: jnp.where(any_sched, agg, old), w_new, state.w)
 
-        # ---- energy ledger (only the selected set transmits)
-        e_round = round_energy(h, mask, model_size, scen.psi, scen.tau)
+        # ---- energy ledger (only the selected set transmits, priced under
+        # the round's uplink transport — analog is eqs. 3-6 verbatim)
+        e_round = transport_mod.round_energy(scheme, point.transport, h, mask,
+                                             model_size, scen)
         energy = state.energy + e_round
 
         # ---- temporal carry: deplete batteries, persist the process state

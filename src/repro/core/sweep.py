@@ -45,6 +45,7 @@ from repro.configs.base import FLConfig, GCAParams
 from repro.core import sharding
 from repro.core.channel import SCENARIOS, scenario_from_config
 from repro.core.dynamics import ChannelProcess, process_from_config
+from repro.core.transport import TransportParams, transport_from_config
 from repro.core.simulator import (SimHistory, init_sim_state,
                                   make_param_round_fn)
 from repro.utils.tree import tree_size
@@ -77,13 +78,14 @@ class SweepPoint:
     energy_C: Any = 8.0
     gca: Any = GCAParams()     # NamedTuple of (possibly traced) scalars
     process: Any = ChannelProcess()  # temporal dynamics (meta: temporal)
+    transport: Any = TransportParams()  # uplink transport (meta: scheme)
     method: str = "ca_afl"
 
 
 jax.tree_util.register_dataclass(
     SweepPoint,
     data_fields=["scenario", "lr0", "lr_decay", "ascent_lr", "energy_C", "gca",
-                 "process"],
+                 "process", "transport"],
     meta_fields=["method"],
 )
 
@@ -99,6 +101,7 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
         energy_C=f32(fl.energy_C),
         gca=GCAParams(*(f32(v) for v in fl.gca)),
         process=process_from_config(fl),
+        transport=transport_from_config(fl),
         method=fl.method,
     )
 
@@ -110,10 +113,14 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
 # the i.i.d. default keeps compiling to exactly PR 1's program. `eval_every`
 # changes the metrics sub-program (per-round eval vs cond-gated cadence +
 # eval_cache carry), so cells with different cadences cannot share an
-# executable — cells with the SAME cadence still do.
+# executable — cells with the SAME cadence still do. `transport` selects the
+# uplink aggregation/energy program (core/transport.py): each scheme is its
+# own group per method, every scheme KNOB (bits, powers, bandwidth) stays
+# traced, and "analog" compiles to exactly the pre-transport program.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
-    "num_subcarriers", "flat_fading", "temporal", "eval_every", "method",
+    "num_subcarriers", "flat_fading", "temporal", "eval_every", "transport",
+    "method",
 )
 
 

@@ -1,0 +1,364 @@
+"""Pluggable uplink-transport layer: analog / quantized / digital-OFDMA.
+
+The paper's headline claim — 3×+ energy savings — is a claim about
+*transmission schemes*, yet until this layer every "baseline" in the repo
+rode the same analog AirComp uplink. This module makes the uplink a
+first-class, sweepable axis with three schemes:
+
+  - ``"analog"`` — the paper's eq. (10) channel-inversion AirComp. This is
+    the pre-existing program, byte-for-byte: the analog branches below
+    delegate to the exact functions the simulator always called, with the
+    same key consumption, so ``transport="analog"`` trajectories are
+    bit-identical to the pre-transport repo (pinned by
+    ``tests/test_transport.py``).
+  - ``"quantized"`` — Li et al. (arXiv:2208.07237)-style high-precision
+    AirComp: each client stochastically rounds its model *update*
+    Δ_i = w_i − w̄ to ``bits`` bits (per-client scale), the quantized deltas
+    superpose over the air (same AWGN discipline as analog), and the PS
+    reconstructs w̄ + (Σ mask·Q(Δ_i) + σz)/K. Fewer bits mean fewer analog
+    symbols per parameter, so upload energy scales by ``bits/32`` relative
+    to analog — the energy/aggregation-error trade-off the scheme exists
+    for. The quantize-scale-sum-noise-normalize pass is fused
+    (``repro.kernels.aircomp``: Pallas kernel on TPU, jnp elsewhere).
+  - ``"digital"`` — Sun et al. (arXiv:2106.00490)-style orthogonal OFDMA
+    uplink: each scheduled client gets its own ``bandwidth`` subband and
+    transmits at ``tx_power``; its rate is Shannon's
+    B·log2(1 + P·|h|²/N₀), the symbol-time latency is M·32/rate (the PS
+    decodes the EXACT f32 update, so the payload is priced at full
+    precision — ``bits`` is the quantized scheme's knob), and the upload
+    energy is P × latency. Error-free decode means aggregation is the plain
+    masked weighted mean with NO superposition noise — the
+    clean-but-costly comparison point.
+
+Contract (the "Transport contract" section of the README has the long
+form): the *scheme* is structural — ``FLConfig.transport`` joins
+``sweep.STATIC_FIELDS``, so each scheme compiles its own program and the
+analog program is exactly the pre-transport one. Every scheme *knob*
+(``bits``, ``tx_power``, ``bandwidth``, ``rx_noise``) is a traced data
+field of :class:`TransportParams` riding the sweep's vmap axis — a whole
+bits-grid or power-grid sweeps under ONE compilation per scheme.
+
+Key discipline: quantization randomness derives from
+``fold_in(k_noise, _QUANT_STREAM)`` folded again with each client's GLOBAL
+index — content-addressed per-client streams, so the dense [N], the
+gathered sparse [K] and the population-sharded paths draw bit-identical
+per-client uniforms (the same trick the control plane uses for replicated
+[N] draws). The AWGN keeps the per-leaf discipline of
+``aircomp_aggregate_tree`` on every path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.aircomp import flat_awgn, stack_accum_dtype
+from repro.core.energy import transmit_energy
+from repro.kernels.aircomp.ops import quant_aircomp_flat
+
+__all__ = [
+    "TRANSPORTS", "ANALOG_BITS", "TransportParams", "transport_from_config",
+    "quant_step", "quantize_rows", "uplink_energy", "round_energy",
+    "digital_rate", "digital_latency", "digital_energy",
+    "quantized_aggregate_stack_tree", "quantized_aggregate_psum_tree",
+    "quantized_aggregate_flat_rows", "flat_awgn_like",
+]
+
+TRANSPORTS = ("analog", "quantized", "digital")
+
+# the analog scheme's implicit payload precision: one f32 symbol stream per
+# parameter. Quantized airtime (hence energy) scales by bits/ANALOG_BITS.
+ANALOG_BITS = 32.0
+
+# fold_in stream of the round's k_noise reserved for quantization uniforms
+# (k_chan owns streams 1-3 in core/dynamics.py; this is a different key, the
+# constant just keeps the reservation greppable).
+_QUANT_STREAM = 7
+
+
+@dataclass(frozen=True)
+class TransportParams:
+    """Per-scheme knobs: traced data + the structural ``scheme`` metadata.
+
+    Data fields accept Python floats or (possibly vmapped) jnp scalars, like
+    every other sweep knob; ``scheme`` is pytree metadata, so points with
+    different schemes land in different sweep compilation groups (the same
+    contract ``ChannelScenario.flat`` and ``ChannelProcess.temporal`` use).
+    """
+
+    bits: Any = 8.0        # payload precision, bits per model parameter
+    tx_power: Any = 0.1    # digital uplink transmit power P (W)
+    bandwidth: Any = 1e5   # digital per-client OFDMA subband B (Hz)
+    rx_noise: Any = 1e-2   # digital receiver noise+interference power N0 (W)
+    scheme: str = "analog"
+
+
+jax.tree_util.register_dataclass(
+    TransportParams,
+    data_fields=["bits", "tx_power", "bandwidth", "rx_noise"],
+    meta_fields=["scheme"],
+)
+
+
+def transport_from_config(fl: FLConfig) -> TransportParams:
+    """Promote the ``FLConfig`` transport knobs to f32 traced scalars."""
+    if fl.transport not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {fl.transport!r}; pick one of {TRANSPORTS}")
+    f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    return TransportParams(
+        bits=f32(fl.quant_bits),
+        tx_power=f32(fl.tx_power),
+        bandwidth=f32(fl.ofdma_bandwidth),
+        rx_noise=f32(fl.rx_noise),
+        scheme=fl.transport,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Energy accounting per scheme (battery depletion and the round ledger both
+# route through here; ``scheme`` is static, so analog compiles to exactly the
+# eqs. (3-6) expression it always was)
+# ---------------------------------------------------------------------------
+
+
+# rate floor (bits/s) of the deep-fade/zero-knob guard below: keeps the
+# latency/energy finite for degenerate traced knobs (a sweep's tx_power or
+# bandwidth grid touching 0 would otherwise produce 0·inf = NaN energy that
+# poisons the ledger and battery gating for EVERY client)
+_MIN_RATE = 1e-12
+
+
+def digital_rate(h_eff, tp: TransportParams, floor=0.05):
+    """Per-client Shannon rate r_i = B·log2(1 + P·|h_i|²/N₀) (bits/s).
+
+    ``floor`` guards the deep fade exactly like the analog path's truncation
+    (h below the paper's threshold would drive the rate — and hence the
+    latency/energy below — to infinity); the rate itself is additionally
+    clamped to a tiny positive floor so zero-valued power/bandwidth knobs
+    price as astronomically-expensive-but-finite instead of inf/NaN.
+    """
+    h = jnp.maximum(h_eff, floor)
+    snr = tp.tx_power * jnp.square(h) / tp.rx_noise
+    return jnp.maximum(tp.bandwidth * jnp.log2(1.0 + snr), _MIN_RATE)
+
+
+def digital_latency(h_eff, model_size: int, tp: TransportParams, floor=0.05):
+    """Symbol-time latency of one upload: t_i = M·32 / r_i (seconds).
+
+    The digital PS decodes the EXACT full-precision update, so the payload
+    is priced at the analog scheme's implicit f32 width (``ANALOG_BITS``
+    bits per parameter) — NOT at ``tp.bits``, which is the quantized
+    scheme's precision/energy trade-off knob. Billing digital for a b-bit
+    payload while delivering the f32 update would make ``bits`` a free
+    lunch that corrupts every cross-transport Pareto comparison.
+    """
+    return model_size * ANALOG_BITS / digital_rate(h_eff, tp, floor)
+
+
+def digital_energy(h_eff, model_size: int, tp: TransportParams, floor=0.05):
+    """Per-client digital upload energy E_i = P · t_i (Sun et al. accounting).
+
+    Monotone increasing in the payload size (model bits M·32) and decreasing
+    in SNR (a better channel shortens the transmission faster than the log
+    grows it) — both pinned by ``tests/test_transport.py``.
+    """
+    return tp.tx_power * digital_latency(h_eff, model_size, tp, floor)
+
+
+def uplink_energy(scheme: str, tp, h_eff, model_size: int, scenario):
+    """Per-client upload energy [..., N] under the given transport scheme.
+
+    ``scenario`` is the round's ``ChannelScenario`` (psi/tau/floor traced).
+    Analog is eqs. (3-6) verbatim; quantized scales the analog airtime by
+    ``bits/ANALOG_BITS``; digital is the OFDMA rate/latency accounting.
+    """
+    if scheme == "analog":
+        return transmit_energy(h_eff, model_size, scenario.psi, scenario.tau,
+                               floor=scenario.floor)
+    if scheme == "quantized":
+        return transmit_energy(h_eff, model_size, scenario.psi, scenario.tau,
+                               floor=scenario.floor) * (tp.bits / ANALOG_BITS)
+    if scheme == "digital":
+        return digital_energy(h_eff, model_size, tp, floor=scenario.floor)
+    raise ValueError(f"unknown transport scheme {scheme!r}")
+
+
+def round_energy(scheme: str, tp, h_eff, mask, model_size: int, scenario):
+    """Cumulative round energy of the selected set under the scheme."""
+    return jnp.sum(mask * uplink_energy(scheme, tp, h_eff, model_size,
+                                        scenario))
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-rounding quantizer (the reference the fused kernel is pinned to)
+# ---------------------------------------------------------------------------
+
+
+def quant_step(flat_rows: jnp.ndarray, bits) -> jnp.ndarray:
+    """Per-client grid step Δ_c = 2·max|row_c| / (2^bits − 1), shape [C].
+
+    Each client scales its own payload into [−scale, scale] and rounds on a
+    (2^bits)-level uniform grid; an all-zero row gets Δ = 0 (the quantizer
+    passes it through unchanged).
+    """
+    levels = jnp.exp2(jnp.asarray(bits, flat_rows.dtype)) - 1.0
+    return 2.0 * jnp.max(jnp.abs(flat_rows), axis=-1) / levels
+
+
+def _client_uniforms(key, client_ids, width: int) -> jnp.ndarray:
+    """[C, width] stochastic-rounding uniforms, content-addressed by GLOBAL
+    client id: row c's stream is fold_in(fold_in(key, _QUANT_STREAM), id_c),
+    so dense [N], gathered [K] and sharded rows draw identical values.
+
+    The fold_in is vmapped SEPARATELY from the uniform draw: fusing both
+    into one vmapped closure lowers to dramatically slower code on CPU
+    (~50× on this container) for the identical values.
+    """
+    kq = jax.random.fold_in(key, _QUANT_STREAM)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(kq, client_ids)
+    return jax.vmap(lambda k: jax.random.uniform(k, (width,)))(keys)
+
+
+def sround(flat_rows: jnp.ndarray, step: jnp.ndarray,
+           u: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased stochastic rounding to the per-row grid: Q(x) = ⌊x/Δ + u⌋·Δ.
+
+    E[Q(x)] = x exactly (u ~ U[0,1)) and Var[Q(x)] = Δ²·p(1−p) ≤ Δ²/4 —
+    both pinned as property tests. Δ = 0 rows pass through unchanged.
+    """
+    d = step[..., None]
+    safe = jnp.where(d > 0, d, 1.0)
+    return jnp.where(d > 0, jnp.floor(flat_rows / safe + u) * d, flat_rows)
+
+
+def quantize_rows(flat_rows: jnp.ndarray, client_ids: jnp.ndarray, key,
+                  bits):
+    """Quantize per-client payload rows [C, P]; returns ``(q_rows, step)``.
+
+    The pure-jnp reference of the fused quantize-aggregate kernel
+    (``repro.kernels.aircomp``): property tests pin unbiasedness and the
+    Δ²/4 variance bound here, and the kernel is differentially pinned
+    against aggregating these exact rows.
+    """
+    step = quant_step(flat_rows, bits)
+    u = _client_uniforms(key, client_ids, flat_rows.shape[-1])
+    return sround(flat_rows, step, u), step
+
+
+# ---------------------------------------------------------------------------
+# Quantized aggregation (eq. (10) over quantized deltas) — dense/sparse/psum
+# ---------------------------------------------------------------------------
+
+
+def flat_awgn_like(key, tree, dtype=jnp.float32) -> jnp.ndarray:
+    """Receiver-noise vector z [P] for an UNstacked model pytree.
+
+    Delegates to :func:`repro.core.aircomp.flat_awgn` with a dummy leading
+    client axis (``leaf[None].shape[1:] == leaf.shape``), so the production
+    tier's params pytree draws the IDENTICAL per-leaf streams as the
+    simulator's stacked trees — one noise-discipline implementation, not
+    two that can desynchronize.
+    """
+    leaves = [leaf[None] for leaf in jax.tree_util.tree_leaves(tree)]
+    return flat_awgn(key, leaves, dtype=dtype)
+
+
+def quantized_aggregate_flat_rows(base_flat, delta_rows, weights, client_ids,
+                                  key, noise_std, bits, k, z=None,
+                                  use_pallas: bool | None = None):
+    """Fused quantized eq. (10) over flat delta rows:
+    ``base + (Σ_c w_c·Q(Δ_c) + σz)/k``.
+
+    ``delta_rows`` [C, P] are per-client payloads (w_i − w̄ on the simulator
+    tier, −η·g_i on the production tier); ``z`` [P] is the pre-drawn AWGN
+    (None ⇒ statically noise-free). The rounding + weighted sum + noise +
+    1/k run as ONE fused pass (``quant_aircomp_flat``: Pallas on TPU, jnp
+    elsewhere); the stochastic-rounding uniforms are drawn here with the
+    per-client fold_in streams.
+    """
+    step = quant_step(delta_rows, bits)
+    u = _client_uniforms(key, client_ids, delta_rows.shape[-1])
+    if z is None:
+        z = jnp.zeros((delta_rows.shape[-1],), delta_rows.dtype)
+        noise_std = 0.0
+    agg = quant_aircomp_flat(delta_rows, weights, step, u, z,
+                             noise_std=noise_std, k=k, use_pallas=use_pallas)
+    return base_flat + agg
+
+
+def _flatten_stack(trees):
+    """(leaves, treedef, flat [C, P], acc_dtype) of a client-stacked pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(trees)
+    c = leaves[0].shape[0]
+    acc_dtype = stack_accum_dtype(leaves)
+    flat = jnp.concatenate(
+        [leaf.reshape(c, -1).astype(acc_dtype) for leaf in leaves], axis=1)
+    return leaves, treedef, flat, acc_dtype
+
+
+def _flatten_base(w_base, acc_dtype):
+    return jnp.concatenate([
+        leaf.reshape(-1).astype(acc_dtype)
+        for leaf in jax.tree_util.tree_leaves(w_base)])
+
+
+def _unflatten_like(flat, leaves, treedef):
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(leaf[0].size)
+        out.append(flat[off:off + size].reshape(leaf.shape[1:])
+                   .astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantized_aggregate_stack_tree(w_base, trees, weights, client_ids, key,
+                                   noise_std, bits, k,
+                                   use_pallas: bool | None = None):
+    """Quantized-transport eq. (10) over a client-stacked pytree.
+
+    ``trees``: leading client/slot axis C (N dense, K sparse) on every leaf;
+    ``client_ids`` [C]: each row's GLOBAL client index (the quantization
+    stream address); ``weights`` [C]: mask/gain entries, 0 for gated slots.
+    Computes w̄ + (Σ_c w_c·Q(tree_c − w̄) + σz)/k with the AWGN drawn via the
+    per-leaf discipline of the analog paths (``flat_awgn`` on ``key``), so
+    bits→∞ recovers the analog aggregate with the identical noise
+    realization.
+    """
+    leaves, treedef, flat, acc_dtype = _flatten_stack(trees)
+    base_flat = _flatten_base(w_base, acc_dtype)
+    delta = flat - base_flat[None, :]
+    if isinstance(noise_std, (int, float)) and noise_std == 0:
+        z = None
+    else:
+        z = flat_awgn(key, leaves, dtype=acc_dtype)
+    new_flat = quantized_aggregate_flat_rows(
+        base_flat, delta, weights, client_ids, key, noise_std, bits, k, z=z,
+        use_pallas=use_pallas)
+    return _unflatten_like(new_flat, leaves, treedef)
+
+
+def quantized_aggregate_psum_tree(w_base, trees_local, weights_local,
+                                  client_ids_local, key, noise_std, bits, k,
+                                  axis_name: str = "clients"):
+    """Population-sharded quantized eq. (10): local quantized partial-sum +
+    ``psum`` + replicated AWGN + 1/k + w̄.
+
+    ``client_ids_local`` are GLOBAL indices of this shard's rows, so each
+    row's stochastic-rounding stream is identical to the dense program's —
+    the sharded aggregate differs from dense only in the cross-shard
+    summation order (the same contract as ``aircomp_psum_tree``).
+    """
+    leaves, treedef, flat, acc_dtype = _flatten_stack(trees_local)
+    base_flat = _flatten_base(w_base, acc_dtype)
+    delta = flat - base_flat[None, :]
+    q, _ = quantize_rows(delta, client_ids_local, key, bits)
+    partial = jnp.einsum("cp,c->p", q, weights_local.astype(acc_dtype))
+    total = jax.lax.psum(partial, axis_name)
+    if not (isinstance(noise_std, (int, float)) and noise_std == 0):
+        total = total + noise_std * flat_awgn(key, leaves, dtype=acc_dtype)
+    return _unflatten_like(base_flat + total / k, leaves, treedef)

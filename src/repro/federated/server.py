@@ -33,7 +33,7 @@ from repro.core.channel import (draw_channels_scenario, effective_channel,
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  process_from_config, step_process)
-from repro.core.energy import round_energy
+from repro.core import transport as transport_mod
 from repro.core.selection import (EXACT_K_METHODS, availability_logits,
                                   gumbel_topk_mask, select_clients,
                                   select_clients_sparse)
@@ -72,21 +72,36 @@ class ParameterServer:
         # compiled program's semantics are unchanged, and mesh=None (or
         # size 1) is a no-op.
         self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
-        self.round_fn = make_fl_round(
-            model, optimizer, fl.num_clients, fl.clients_per_round,
-            noise_std=fl.noise_std, ctx=ctx)
-        # the selected-K gather round (hot-path contract): used for exact-K
-        # methods whenever the batch has the canonical block layout (checked
-        # host-side per step; dense round_fn is the fallback)
+        # Uplink transport (core/transport.py): validates the scheme and
+        # promotes the knobs. The digital-OFDMA scheme decodes each payload
+        # orthogonally — no superposition, hence NO receiver AWGN on the
+        # aggregate — so its compiled rounds are built noise-free; analog and
+        # quantized keep eq. (10)'s z-term.
+        self.transport = transport_mod.transport_from_config(fl)
+        self._round_noise = 0.0 if fl.transport == "digital" else fl.noise_std
+        quantized = fl.transport == "quantized"
+        # the quantized transport's round is ALWAYS the fused quantized-delta
+        # aggregate (_make_quant_apply below) — the dense round and the
+        # selected-K gather round would be dead objects, so they are not
+        # built for it (there is no dense fallback: the delta probe needs
+        # the canonical one-block-per-client batch layout).
+        self.round_fn = None
         self._gather_round = None
-        if fl.method in EXACT_K_METHODS:
-            self._gather_round = make_fl_round(
+        if not quantized:
+            self.round_fn = make_fl_round(
                 model, optimizer, fl.num_clients, fl.clients_per_round,
-                noise_std=fl.noise_std, ctx=ctx, gather_k=True)
-        if jit_round:
-            self.round_fn = jax.jit(self.round_fn)
-            if self._gather_round is not None:
-                self._gather_round = jax.jit(self._gather_round)
+                noise_std=self._round_noise, ctx=ctx)
+            # the selected-K gather round (hot-path contract): used for
+            # exact-K methods whenever the batch has the canonical block
+            # layout (checked host-side per step; dense round_fn fallback)
+            if fl.method in EXACT_K_METHODS:
+                self._gather_round = make_fl_round(
+                    model, optimizer, fl.num_clients, fl.clients_per_round,
+                    noise_std=self._round_noise, ctx=ctx, gather_k=True)
+            if jit_round:
+                self.round_fn = jax.jit(self.round_fn)
+                if self._gather_round is not None:
+                    self._gather_round = jax.jit(self._gather_round)
         self.optimizer = optimizer
         # Same parameterized physical layer as the simulator/sweep tier, so
         # scenario knobs (shadowing, per-client pathloss, floor) behave
@@ -106,11 +121,36 @@ class ParameterServer:
         self._reuse_probe_grads = reuse_probe_grads
         if fl.method == "gca":
             self._grad_probe = make_grad_norm_probe(
-                model, fl.num_clients, ctx=ctx, with_grads=reuse_probe_grads)
-            self._gca_apply = self._make_gca_apply()
+                model, fl.num_clients, ctx=ctx,
+                with_grads=reuse_probe_grads or quantized)
+            if not quantized:  # quantized rounds use _quant_apply instead
+                self._gca_apply = self._make_gca_apply()
+                if jit_round:
+                    self._gca_apply = jax.jit(self._gca_apply)
             if jit_round:
                 self._grad_probe = jax.jit(self._grad_probe)
-                self._gca_apply = jax.jit(self._gca_apply)
+        # Quantized transport: every client's payload is its stochastically-
+        # rounded SGD delta −η·g_i (the simulator's w_i − w̄ at one local
+        # step), so the server needs per-client gradients for ANY method —
+        # the same with_grads probe GCA reuses. The masked fused aggregate of
+        # the quantized deltas is applied directly (_make_quant_apply);
+        # tests/test_cross_tier.py pins it against one simulator round.
+        self._delta_probe = None
+        if quantized:
+            import warnings
+            warnings.warn(
+                "transport='quantized' applies the paper's SGD aggregation "
+                "directly: per-client deltas are -eta*grad with eta = "
+                "fl.lr0 * fl.lr_decay**round (matching the simulator tier); "
+                "the passed optimizer's update rule is NOT used and its "
+                "state passes through untouched", stacklevel=2)
+            self._delta_probe = (self._grad_probe or make_grad_norm_probe(
+                model, fl.num_clients, ctx=ctx, with_grads=True))
+            self._quant_apply = self._make_quant_apply()
+            if jit_round:
+                if self._grad_probe is None:
+                    self._delta_probe = jax.jit(self._delta_probe)
+                self._quant_apply = jax.jit(self._quant_apply)
         # control-channel loss probe for rounds where NOBODY transmits
         # (battery/availability gating): the λ-ascent still needs f_i(w̄)
         self._loss_probe = lambda p, b: per_client_losses(
@@ -123,7 +163,7 @@ class ParameterServer:
         per-client gradients (the same fused eq.-(10) shape as the
         simulator's hot path), AWGN with the dense round's key discipline,
         then the server optimizer."""
-        opt, noise_std = self.optimizer, self.fl.noise_std
+        opt, noise_std = self.optimizer, self._round_noise
 
         def apply_fn(params, opt_state, gflat, probe_losses, mask, key):
             k_sched = jnp.maximum(jnp.sum(mask), 1.0)
@@ -144,6 +184,35 @@ class ParameterServer:
             # which the probe already measured at w^t
             loss = jnp.sum(mask * probe_losses) / k_sched
             return params, opt_state, loss, gnorm
+
+        return apply_fn
+
+    def _make_quant_apply(self):
+        """The quantized-transport round: each client's payload is its SGD
+        delta −η·g_i reconstructed from the per-client grad probe (same
+        batch, same params), stochastically rounded with the simulator's
+        per-client fold_in streams, and the fused masked aggregate of the
+        quantized deltas is added to the params directly — eq. (10) over
+        quantized updates, numerically one simulator round at local_steps=1
+        (pinned by ``tests/test_cross_tier.py``). The server optimizer is
+        bypassed (its state passes through untouched): the quantized payload
+        IS the applied update, as in the paper's model-averaging."""
+        noise_std, tp = self._round_noise, self.transport
+        n = self.fl.num_clients
+
+        def apply_fn(params, gflat, probe_losses, mask, key, eta):
+            k_sched = jnp.maximum(jnp.sum(mask), 1.0)
+            flat, unravel = ravel_pytree(params)
+            flat = flat.astype(jnp.float32)
+            deltas = (-eta) * gflat
+            z = (transport_mod.flat_awgn_like(key, params, jnp.float32)
+                 if noise_std else None)
+            new_flat = transport_mod.quantized_aggregate_flat_rows(
+                flat, deltas, mask, jnp.arange(n), key,
+                noise_std if noise_std else 0.0, tp.bits, k_sched, z=z)
+            gnorm = jnp.sqrt(jnp.sum(jnp.square(new_flat - flat))) / eta
+            loss = jnp.sum(mask * probe_losses) / k_sched
+            return unravel(new_flat), loss, gnorm
 
         return apply_fn
 
@@ -218,7 +287,8 @@ class ParameterServer:
             cs = state.chan_state
             pstep = step_process(k_chan, self.scenario, self.process, cs,
                                  fl.num_clients, fl.num_subcarriers,
-                                 self._model_size)
+                                 self._model_size, scheme=fl.transport,
+                                 tp=self.transport)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
         else:
             h = effective_channel(draw_channels_scenario(
@@ -228,7 +298,7 @@ class ParameterServer:
         idx = probe_losses = gflat = None
         if fl.method == "gca":
             self._check_probe_layout(batch)
-            if self._reuse_probe_grads:
+            if self._reuse_probe_grads or self._delta_probe is not None:
                 gnorms, probe_losses, gflat = self._grad_probe(
                     state.params, batch)
             else:
@@ -242,6 +312,18 @@ class ParameterServer:
             mask, idx = select_clients_sparse(
                 fl.method, k_sel, state.lam, h, fl.clients_per_round,
                 C=fl.energy_C, avail=eligible)
+            if self._delta_probe is not None:
+                # quantized transport: per-client deltas for the rounding
+                try:
+                    self._check_probe_layout(batch)
+                except ValueError as e:
+                    raise ValueError(
+                        "transport='quantized' needs the canonical one-"
+                        "contiguous-block-per-client batch layout for its "
+                        f"per-client delta probe (no dense fallback): {e}"
+                    ) from e
+                _, probe_losses, gflat = self._delta_probe(
+                    state.params, batch)
 
         # --- compiled round on the mesh ------------------------------------
         if int(jnp.sum(mask)) == 0:
@@ -254,6 +336,19 @@ class ParameterServer:
                 loss=jnp.zeros(()),
                 client_losses=self._loss_probe(state.params, batch),
                 grad_norm=jnp.zeros(()))
+        elif self._delta_probe is not None:
+            # quantized transport (any method): apply the fused masked
+            # aggregate of the stochastically-rounded per-client deltas;
+            # η follows the simulator's decayed schedule at this round
+            eta = fl.lr0 * (fl.lr_decay ** state.round)
+            params, loss, gnorm = self._quant_apply(
+                state.params, gflat, probe_losses, mask, k_noise,
+                jnp.float32(eta))
+            opt_state = state.opt_state
+            metrics = FLRoundMetrics(
+                loss=loss,
+                client_losses=self._loss_probe(params, batch),
+                grad_norm=gnorm)
         elif gflat is not None:
             # GCA probe-reuse: the probe's per-client gradients become the
             # round's descent update (same batch, same params — the former
@@ -273,8 +368,11 @@ class ParameterServer:
             params, opt_state, metrics = self.round_fn(
                 state.params, state.opt_state, batch, mask, k_noise)
 
-        # --- energy ledger (eqs. 3-6; only the selected set transmits) -----
-        e_round = float(round_energy(h, mask, self._model_size, fl.psi, fl.tau))
+        # --- energy ledger (only the selected set transmits, priced under
+        # the configured uplink transport; analog is eqs. 3-6 verbatim) -----
+        e_round = float(transport_mod.round_energy(
+            fl.transport, self.transport, h, mask, self._model_size,
+            self.scenario))
 
         # --- temporal carry: battery depletion + process state -------------
         if self.process.temporal:

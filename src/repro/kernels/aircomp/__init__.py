@@ -1,1 +1,4 @@
-from repro.kernels.aircomp.ops import aircomp_aggregate_flat
+from repro.kernels.aircomp.ops import (aircomp_aggregate_flat,
+                                       quant_aircomp_flat)
+
+__all__ = ["aircomp_aggregate_flat", "quant_aircomp_flat"]

@@ -37,6 +37,78 @@ def _aircomp_kernel(ns_ref, ik_ref, x_ref, w_ref, z_ref, o_ref):
     o_ref[...] = acc * ik_ref[0, 0]
 
 
+def _quant_aircomp_kernel(ns_ref, ik_ref, x_ref, w_ref, d_ref, u_ref, z_ref,
+                          o_ref):
+    """Fused quantize-aggregate tile (the quantized transport's hot pass).
+
+    SMEM scalar layout (both (1, 1) f32, in argument order):
+      ``ns_ref`` — receiver-noise std σ of eq. (10); traced, NOT a compile
+      arg (a noise sweep must not recompile the kernel);
+      ``ik_ref`` — 1/K with K the round's ACTUAL scheduled count (traced:
+      availability/battery gating makes it data-dependent).
+    Per-client VMEM operands ride like the gains: ``w_ref`` [C, 1] mask/gain
+    entries, ``d_ref`` [C, 1] stochastic-rounding grid steps Δ_c (0 ⇒ the
+    row passes through unquantized). ``u_ref`` [C, TM] pre-drawn U[0,1)
+    rounding uniforms tile with ``x_ref`` — the PRNG stays outside the
+    kernel (per-client fold_in streams, see ``core/transport.py``), the
+    kernel fuses round + scale + superposition-sum + AWGN + normalize into
+    one pass over the model dimension.
+    """
+    x = x_ref[...].astype(jnp.float32)          # [C, TM]
+    u = u_ref[...].astype(jnp.float32)          # [C, TM]
+    w = w_ref[...].astype(jnp.float32)          # [C, 1]
+    d = d_ref[...].astype(jnp.float32)          # [C, 1]
+    safe = jnp.where(d > 0, d, 1.0)
+    q = jnp.where(d > 0, jnp.floor(x / safe + u) * d, x)
+    acc = jnp.sum(q * w, axis=0)                # [TM]
+    acc = acc + ns_ref[0, 0] * z_ref[...].astype(jnp.float32)
+    o_ref[...] = acc * ik_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
+                         u: jnp.ndarray, z: jnp.ndarray,
+                         *, noise_std, k, interpret: bool = False
+                         ) -> jnp.ndarray:
+    """x/u [C, M]; w/d [C]; z [M] -> quantized aggregate [M] fp32.
+
+    Same blocking as :func:`aircomp_pallas` (M padded to TILE_M, C whole in
+    VMEM); ``noise_std``/``k`` ride as (1, 1) SMEM scalars per the kernel
+    docstring. The zero-padded columns quantize to exact zeros (⌊0 + u⌋ = 0
+    for u < 1), so padding never leaks into the output.
+    """
+    c, m = x.shape
+    tile = min(TILE_M, m) if m % 128 == 0 else m
+    pad = (-m) % tile
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+        z = jnp.pad(z, (0, pad))
+    mp = m + pad
+    grid = (mp // tile,)
+    ns = jnp.asarray(noise_std, jnp.float32).reshape(1, 1)
+    inv_k = (1.0 / jnp.asarray(k, jnp.float32)).reshape(1, 1)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        _quant_aircomp_kernel,
+        grid=grid,
+        in_specs=[
+            scalar_spec,
+            scalar_spec,
+            pl.BlockSpec((c, tile), lambda i: (0, i)),
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, tile), lambda i: (0, i)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=interpret,
+    )(ns, inv_k, x, w[:, None], d[:, None], u, z)
+    return out[:m]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
                    *, noise_std, k, interpret: bool = False) -> jnp.ndarray:

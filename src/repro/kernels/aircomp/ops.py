@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.aircomp.kernel import aircomp_pallas
-from repro.kernels.aircomp.ref import aircomp_ref
+from repro.kernels.aircomp.kernel import aircomp_pallas, quant_aircomp_pallas
+from repro.kernels.aircomp.ref import aircomp_ref, quant_aircomp_ref
 
 
 def on_tpu() -> bool:
@@ -38,3 +38,25 @@ def aircomp_aggregate_flat(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
         return aircomp_pallas(x, w, z, noise_std=noise_std, k=k,
                               interpret=not on_tpu())
     return aircomp_ref(x, w, z, noise_std, k)
+
+
+def quant_aircomp_flat(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
+                       u: jnp.ndarray, z: jnp.ndarray, *, noise_std, k,
+                       use_pallas: bool = None) -> jnp.ndarray:
+    """Fused quantize-aggregate (Σ_c w_c·Q_c(x_c) + σz)/k over flat payload
+    rows [C, M] (the quantized transport's eq. (10) hot pass).
+
+    ``d`` [C] per-client stochastic-rounding steps, ``u`` [C, M] pre-drawn
+    rounding uniforms (see ``core/transport.quantize_rows`` for the key
+    discipline). Dispatch mirrors :func:`aircomp_aggregate_flat`: Pallas on
+    TPU / interpret off-TPU when forced, the jnp oracle otherwise, and
+    always the dtype-preserving oracle for wider-than-f32 buffers.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if jnp.dtype(x.dtype).itemsize > 4:
+        use_pallas = False
+    if use_pallas:
+        return quant_aircomp_pallas(x, w, d, u, z, noise_std=noise_std, k=k,
+                                    interpret=not on_tpu())
+    return quant_aircomp_ref(x, w, d, u, z, noise_std, k)

@@ -20,3 +20,23 @@ def aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray,
     acc_t = jnp.result_type(x.dtype, jnp.float32)
     acc = jnp.einsum("nm,n->m", x.astype(acc_t), w.astype(acc_t))
     return (acc + noise_std * z.astype(acc_t)) / k
+
+
+def quant_aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
+                      u: jnp.ndarray, z: jnp.ndarray,
+                      noise_std: float, k: float) -> jnp.ndarray:
+    """Quantize-aggregate oracle: y = (Σ_c w_c·Q_c(x_c) + σz)/k.
+
+    Q_c is unbiased stochastic rounding on client c's grid:
+    Q(x) = ⌊x/d_c + u⌋·d_c with u ~ U[0,1) (``transport.sround``); d_c = 0
+    rows pass through unquantized (an all-zero payload). x/u [C, M]; w/d
+    [C]; z [M] -> [M] at max(x.dtype, f32) precision.
+    """
+    acc_t = jnp.result_type(x.dtype, jnp.float32)
+    d_ = d[:, None].astype(acc_t)
+    safe = jnp.where(d_ > 0, d_, 1.0)
+    q = jnp.where(d_ > 0,
+                  jnp.floor(x.astype(acc_t) / safe + u.astype(acc_t)) * d_,
+                  x.astype(acc_t))
+    acc = jnp.einsum("cm,c->m", q, w.astype(acc_t))
+    return (acc + noise_std * z.astype(acc_t)) / k

@@ -124,6 +124,81 @@ def test_server_step_matches_simulator_round_temporal(tier_data):
 
 
 # ---------------------------------------------------------------------------
+# Uplink transports: the tiers cannot drift on quantized/digital either
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["ca_afl", "fedavg", "gca"])
+@pytest.mark.parametrize("transport", ["quantized", "digital"])
+def test_server_step_matches_simulator_round_transports(tier_data, transport,
+                                                        method):
+    """One ``ParameterServer.step`` == one simulator round under the
+    quantized and digital transports: same mask, λ, energy ledger and
+    aggregated weights. Quantized exercises the per-client stochastic-
+    rounding streams on both tiers (the server reconstructs each client's
+    −η·g_i delta from the grad probe and rounds it with the simulator's
+    fold_in discipline); digital exercises the OFDMA energy accounting with
+    the noise-free orthogonal decode."""
+    xs, ys = tier_data
+    fl = _fl(method, transport=transport, quant_bits=6.0)
+    sim_model = logistic_regression(DIM, CLS)
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    round_fn = make_param_round_fn(sim_model, fl, (xs, ys, xs, ys),
+                                   tree_size(state.w), method)
+    new_state, hist = jax.jit(lambda p, s: round_fn(p, s, 0))(point, state)
+
+    prod_model = logistic_regression_prod(DIM, CLS)
+    ps = ParameterServer(prod_model, sgd(fl.lr0), fl, seed=0)
+    ps.key = state.key
+    srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
+                      opt_state=sgd(fl.lr0).init(state.w),
+                      lam=state.lam)
+    srv = ps.step(srv, _prod_batch(xs, ys))
+
+    assert srv.history[-1]["num_scheduled"] == int(hist.num_scheduled)
+    np.testing.assert_allclose(srv.energy_joules, float(hist.energy),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(srv.lam), np.asarray(new_state.lam),
+                               atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(srv.params),
+                    jax.tree_util.tree_leaves(new_state.w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_server_battery_depletion_matches_simulator_quantized(tier_data):
+    """Battery gating prices uploads under the transport on BOTH tiers: the
+    temporal ChanState (incl. the post-round battery ledger) stays equal
+    through a quantized round."""
+    xs, ys = tier_data
+    fl = _fl("ca_afl", temporal=True, battery_init=1.0,
+             transport="quantized", quant_bits=6.0)
+    sim_model = logistic_regression(DIM, CLS)
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    round_fn = make_param_round_fn(sim_model, fl, (xs, ys, xs, ys),
+                                   tree_size(state.w), "ca_afl")
+    new_state, hist = jax.jit(lambda p, s: round_fn(p, s, 0))(point, state)
+
+    prod_model = logistic_regression_prod(DIM, CLS)
+    ps = ParameterServer(prod_model, sgd(fl.lr0), fl, seed=0)
+    ps.key = state.key
+    srv = ps.init_state(jax.random.PRNGKey(0))
+    srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
+                      opt_state=sgd(fl.lr0).init(state.w),
+                      lam=state.lam, chan_state=srv.chan_state)
+    srv = ps.step(srv, _prod_batch(xs, ys))
+    np.testing.assert_allclose(srv.energy_joules, float(hist.energy),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(srv.chan_state.battery),
+                               np.asarray(new_state.chan_state.battery),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # GCA on the server tier (regression: used to raise ValueError)
 # ---------------------------------------------------------------------------
 
