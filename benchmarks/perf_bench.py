@@ -183,6 +183,30 @@ def main():
         _write(payload)
         raise
 
+    # ---- population-scale control-plane cell (subprocess for the same
+    # 8-device isolation): N-scaling of control_plane="sharded" up to 10^6
+    # clients; popscale_bench itself enforces the O(N/D) per-device-memory
+    # ceiling and fails the job on a replication regression ----------------
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.popscale_bench"],
+            capture_output=True, text=True, check=True,
+            cwd=Path(__file__).resolve().parent.parent)
+        pop = json.loads(proc.stdout)
+        payload["cells"]["popscale"] = pop
+        big = max(pop["cells"].values(), key=lambda c: c["n_clients"])
+        print(f"[perf_bench] popscale: N={big['n_clients']:,} at "
+              f"{big['rounds_per_second']:.2f} rounds/s, "
+              f"{big['control_bytes_per_client']:.1f} control B/client "
+              f"(x{pop['per_client_bytes_ratio_largest_vs_smallest']:.2f} "
+              "vs smallest N)")
+    except subprocess.CalledProcessError as e:
+        print(f"[perf_bench] popscale_bench failed:\n{e.stderr}",
+              file=sys.stderr)
+        payload["cells"]["popscale"] = {"error": e.stderr[-2000:]}
+        _write(payload)
+        raise
+
     _write(payload)
     print(f"[perf_bench] wrote {RESULTS / 'BENCH_perf.json'} "
           f"(speedup_n100={payload['speedup_n100']:.2f}x)")

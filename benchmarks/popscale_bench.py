@@ -1,0 +1,136 @@
+"""Population-scale control-plane bench: N up to 10^6 clients on 8 devices.
+
+The ISSUE-7 acceptance cell: the ``control_plane="sharded"`` runner must
+scale the CONTROL plane O(N/D) per device — before the fix the replicated
+discipline materialized every per-round [N] draw (channels, availability,
+selection scores, λ, ChanState) on every device, so a million-client round
+allocated ~10^6-row buffers D times over.
+
+Self-contained so it can force ``--xla_force_host_platform_device_count=8``
+BEFORE jax initializes; ``perf_bench`` runs it as a subprocess (same policy
+as ``shard_bench``). Prints one JSON object on stdout; rest to stderr.
+
+Per N in the scaling grid it records:
+
+  - compile seconds (AOT ``lower().compile()`` of the T-round scan)
+  - execution wall seconds and rounds/sec
+  - ``temp_size_in_bytes`` from XLA memory analysis — the per-program
+    scratch the control plane actually allocates, and the quantity that was
+    O(N·D) under replication
+  - ``control_bytes_per_client`` = temp bytes / N
+
+and asserts the ceiling: temp bytes per client at the largest N must stay
+within ``CEILING_FACTOR`` of the smallest-N cell (linear O(N) total ==
+O(N/D) per device — a replicated [N] buffer per device would show up as a
+~D-fold step), plus an absolute per-device byte ceiling at N=10^6.
+
+`PYTHONPATH=src python -m benchmarks.popscale_bench`
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_FORCE = "--xla_force_host_platform_device_count=8"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {_FORCE}"
+
+import jax  # noqa: E402  (env must be set before jax initializes)
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import FLConfig  # noqa: E402
+from repro.core import sharding  # noqa: E402
+from repro.models.logreg import logistic_regression  # noqa: E402
+
+# tiny model + shard-size-2 synthetic rows: the point is the CONTROL plane
+# (draws/selection/λ), not client compute, so N dominates every buffer
+DIM, CLS, SHARD, ROUNDS, K = 16, 4, 2, 2, 32
+GRID = (10_000, 100_000, 1_000_000)
+CEILING_FACTOR = 1.6   # per-client temp bytes may drift, not step ~D-fold
+DEVICE_CEILING_BYTES = 2 << 30   # 2 GiB/device at N=10^6
+
+
+def _data(n, key):
+    x = jax.random.normal(key, (n, SHARD, DIM), jnp.float32)
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n, SHARD), 0, CLS)
+    return x, y, x, y
+
+
+def bench_n(model, n):
+    fl = FLConfig(num_clients=n, clients_per_round=K, rounds=ROUNDS,
+                  batch_size=SHARD, local_steps=1, num_subcarriers=1,
+                  method="ca_afl", lr0=0.1, ascent_lr=1e-2,
+                  control_plane="sharded", eval_every=ROUNDS)
+    mesh = sharding.client_mesh(jax.device_count())
+    data = _data(n, jax.random.PRNGKey(0))
+    fn, point, sharded = sharding.build_control_sharded_runner(
+        model, fl, data, mesh)
+    key = jax.random.PRNGKey(0)
+
+    t0 = time.perf_counter()
+    compiled = fn.lower(point, key, *sharded).compile()
+    compile_s = time.perf_counter() - t0
+
+    jax.block_until_ready(compiled(point, key, *sharded))  # warm-up
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled(point, key, *sharded))
+    exec_s = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    temp = int(ma.temp_size_in_bytes)
+    row = {
+        "n_clients": n,
+        "devices": mesh.size,
+        "compile_seconds": compile_s,
+        "exec_seconds": exec_s,
+        "rounds_per_second": ROUNDS / exec_s,
+        "temp_bytes": temp,
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "control_bytes_per_client": temp / n,
+        "temp_bytes_per_device": temp // mesh.size,
+    }
+    print(f"[popscale_bench] N={n:>9,}  {row['rounds_per_second']:7.2f} "
+          f"rounds/s  compile {compile_s:5.1f}s  "
+          f"temp {temp:>14,} B  ({row['control_bytes_per_client']:7.1f} "
+          "B/client)", file=sys.stderr)
+    return row
+
+
+def main():
+    model = logistic_regression(DIM, CLS)
+    cells = [bench_n(model, n) for n in GRID]
+    small, large = cells[0], cells[-1]
+    ratio = (large["control_bytes_per_client"]
+             / small["control_bytes_per_client"])
+    payload = {
+        "bench": "popscale_bench",
+        "grid": f"N in {list(GRID)} x T={ROUNDS} (dim={DIM}, K={K}, "
+                "ca_afl, sharded control plane)",
+        "host_devices": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "cells": {f"n{c['n_clients']}": c for c in cells},
+        "per_client_bytes_ratio_largest_vs_smallest": ratio,
+        "ceiling_factor": CEILING_FACTOR,
+    }
+    json.dump(payload, sys.stdout)
+    sys.stdout.write("\n")
+    # ceilings AFTER the artifact is printed (artifact-first policy)
+    if ratio > CEILING_FACTOR:
+        raise SystemExit(
+            f"control-plane memory regression: temp bytes/client grew "
+            f"{ratio:.2f}x from N={small['n_clients']:,} to "
+            f"N={large['n_clients']:,} (> {CEILING_FACTOR}x ceiling — a "
+            "replicated [N] buffer would step ~devices-fold)")
+    if large["temp_bytes_per_device"] > DEVICE_CEILING_BYTES:
+        raise SystemExit(
+            f"per-device ceiling exceeded at N={large['n_clients']:,}: "
+            f"{large['temp_bytes_per_device']:,} B/device > "
+            f"{DEVICE_CEILING_BYTES:,} B")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

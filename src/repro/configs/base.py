@@ -170,4 +170,17 @@ class FLConfig:
     battery_init: float = float("inf")  # per-client battery budget (Joules)
     method: str = "ca_afl"          # ca_afl | afl | fedavg | greedy | gca
     gca: GCAParams = GCAParams()    # GCA hyperparameters (sweepable)
+    # Control-plane randomness discipline (STRUCTURAL: selects the per-round
+    # program and joins the sweep compilation-group signature).
+    #   "replicated" — every [N]-shaped draw (channels, Gumbel, availability,
+    #     batch indices) is a full-population array from one key; under a
+    #     clients mesh each device draws all N rows and slices its own. This
+    #     is the pre-ISSUE-7 program, byte-for-byte.
+    #   "sharded"    — per-client draws are content-addressed by GLOBAL
+    #     client id (fold_in streams, the quantizer's trick), so a device
+    #     materializes only its N/D rows and exact-K selection runs as a
+    #     hierarchical tree top-k. The mesh run is bit-identical to the
+    #     single-device run of the SAME discipline; the million-client
+    #     regime requires it (see core/sharding.py).
+    control_plane: str = "replicated"  # replicated | sharded
     seed: int = 0

@@ -28,13 +28,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
+from repro.core.energy import TRUNCATION_FLOOR
 
 
 def draw_channels(
     key,
     num_clients: int,
     num_subcarriers: int,
-    floor: float = 0.05,
+    floor: float = TRUNCATION_FLOOR,
     flat: bool = True,
 ):
     """Draw |h_{i,b}| magnitudes, shape [num_clients, num_subcarriers].
@@ -76,7 +77,7 @@ class ChannelScenario:
     pytree metadata (static) because it changes the shape of the random draw.
     """
 
-    floor: Any = 0.05          # truncation |h| >= floor
+    floor: Any = TRUNCATION_FLOOR  # truncation |h| >= floor
     noise_std: Any = 0.0       # receiver AWGN std of eq. (10)
     psi: Any = 0.5e-3          # power-scaling factor (eq. 5)
     tau: Any = 1e-3            # symbol period
@@ -155,6 +156,90 @@ def draw_channels_scenario(key, scenario: ChannelScenario, num_clients: int,
     if scenario.flat:
         mag = jnp.broadcast_to(mag, (num_clients, num_subcarriers))
     return compose_channel(mag, key, scenario, num_clients)
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed per-client draws (the control_plane="sharded" discipline).
+#
+# Every per-client random quantity is drawn from a stream addressed by the
+# client's GLOBAL id: stream_i = fold_in(stream_key, id_i). A device holding
+# rows ids=[d·n/D, ...) therefore draws exactly its own N/D rows — no full-[N]
+# array ever exists — and any two devices (or the unsharded reference with
+# ids=arange(N)) produce bit-identical values for the same client. This is
+# the trick the quantizer's `_client_uniforms` (core/transport.py) already
+# proves bit-stable across dense/gathered/sharded paths.
+#
+# RULE for adding new per-client randomness under this discipline: derive a
+# fresh stream key (a new fold_in stream of the round's key split — never
+# re-split a key an existing path consumes), then draw per client via
+# client_keys(stream_key, ids). Keep the fold_in vmap SEPARATE from the draw
+# vmap (fusing both into one vmapped closure lowers ~50× slower on CPU).
+# ---------------------------------------------------------------------------
+
+
+def client_keys(key, ids: jnp.ndarray):
+    """One PRNG key per GLOBAL client id: keys[c] = fold_in(key, ids[c])."""
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, ids)
+
+
+def client_normals(key, ids: jnp.ndarray, shape=()) -> jnp.ndarray:
+    """[n, *shape] standard normals, content-addressed by client id."""
+    keys = client_keys(key, ids)
+    return jax.vmap(lambda k: jax.random.normal(k, shape))(keys)
+
+
+def client_uniforms(key, ids: jnp.ndarray, shape=()) -> jnp.ndarray:
+    """[n, *shape] U[0,1) draws, content-addressed by client id."""
+    keys = client_keys(key, ids)
+    return jax.vmap(lambda k: jax.random.uniform(k, shape))(keys)
+
+
+def compose_channel_ids(mag: jnp.ndarray, key, scenario: ChannelScenario,
+                        ids: jnp.ndarray, walk_gain=None) -> jnp.ndarray:
+    """Per-id large-scale composition: mag × shadow × pathloss, floor-clipped.
+
+    The ``control_plane="sharded"`` counterpart of :func:`compose_channel`:
+    the per-round i.i.d. shadow is content-addressed on stream 1 of ``key``
+    (one scalar normal per client id), and a per-client [N] ``pathloss`` is
+    indexed by ``ids`` — an O(N) *input* is still fine, it is the O(N)
+    *draws* this discipline eliminates.
+    """
+    shadow = jnp.exp(
+        scenario.shadowing_std
+        * client_normals(jax.random.fold_in(key, 1), ids)
+    )[:, None]
+    if walk_gain is not None:
+        shadow = shadow * walk_gain
+    pathloss = jnp.asarray(scenario.pathloss)
+    if pathloss.ndim == 1:
+        pathloss = pathloss[ids]
+    pathloss = jnp.reshape(pathloss, (-1, 1)) if pathloss.ndim else pathloss
+    return jnp.maximum(mag * shadow * pathloss, scenario.floor)
+
+
+def rayleigh_mag_ids(key, scenario: ChannelScenario, ids: jnp.ndarray,
+                     num_subcarriers: int) -> jnp.ndarray:
+    """Per-id small-scale |CN(0,1)| magnitudes, [n, num_subcarriers]."""
+    draw_sc = 1 if scenario.flat else num_subcarriers
+    re_im = client_normals(key, ids, (2, draw_sc)) / jnp.sqrt(2.0)
+    mag = jnp.sqrt(re_im[:, 0] ** 2 + re_im[:, 1] ** 2)  # [n, draw_sc]
+    if scenario.flat:
+        mag = jnp.broadcast_to(mag, (ids.shape[0], num_subcarriers))
+    return mag
+
+
+def draw_channels_scenario_ids(key, scenario: ChannelScenario,
+                               ids: jnp.ndarray,
+                               num_subcarriers: int) -> jnp.ndarray:
+    """Content-addressed channel draw for the clients in ``ids``.
+
+    Returns [n, num_subcarriers] magnitudes where row c depends only on
+    ``(key, ids[c])`` — NOT on which device draws it or which other ids ride
+    along — so sharded and unsharded programs of the ``"sharded"`` control
+    plane see bit-identical channels per client.
+    """
+    mag = rayleigh_mag_ids(key, scenario, ids, num_subcarriers)
+    return compose_channel_ids(mag, key, scenario, ids)
 
 
 # ---------------------------------------------------------------------------

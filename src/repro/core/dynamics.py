@@ -53,7 +53,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.channel import compose_channel, effective_channel
+from repro.core.channel import (client_normals, client_uniforms,
+                                compose_channel, compose_channel_ids,
+                                effective_channel)
 from repro.core.transport import uplink_energy
 
 
@@ -116,6 +118,26 @@ def init_chan_state(process: ChannelProcess, key, num_clients: int,
     )
 
 
+def init_chan_state_ids(process: ChannelProcess, key, ids,
+                        num_subcarriers: int, flat: bool) -> ChanState:
+    """Content-addressed stationary init for the clients in ``ids`` (the
+    ``control_plane="sharded"`` discipline, ``core/channel.py``): each row of
+    the fading state depends only on (key, id), so a device initializes only
+    its own N/D rows and any sharding of the population agrees bit-for-bit
+    per client."""
+    draw_sc = 1 if flat else num_subcarriers
+    n = ids.shape[0]
+    fast = jnp.moveaxis(
+        client_normals(key, ids, (2, draw_sc)) / jnp.sqrt(2.0), 0, 1)
+    return ChanState(
+        fast=fast,
+        log_shadow=jnp.zeros((n,), jnp.float32),
+        avail=jnp.ones((n,), jnp.float32),
+        battery=jnp.broadcast_to(
+            jnp.asarray(process.battery_init, jnp.float32), (n,)),
+    )
+
+
 def evolve_fading(key, scenario, process: ChannelProcess, state: ChanState,
                   num_clients: int, num_subcarriers: int):
     """One Gauss-Markov step; returns (h_mag [N, N_sc], fast', log_shadow').
@@ -143,10 +165,46 @@ def evolve_fading(key, scenario, process: ChannelProcess, state: ChanState,
     return h_mag, fast, log_shadow
 
 
+def evolve_fading_ids(key, scenario, process: ChannelProcess,
+                      state: ChanState, ids, num_subcarriers: int):
+    """Content-addressed Gauss-Markov step for the clients in ``ids``.
+
+    Stream layout mirrors :func:`evolve_fading` exactly — innovation on
+    ``key`` itself, i.i.d. shadow on stream 1, walk innovation on stream 2 —
+    but every draw is per-client fold_in(stream, id), so a device evolves
+    only its own rows of ``state`` and the values per client are independent
+    of the sharding.
+    """
+    flat = scenario.flat
+    draw_sc = 1 if flat else num_subcarriers
+    n = ids.shape[0]
+    eps = jnp.moveaxis(
+        client_normals(key, ids, (2, draw_sc)) / jnp.sqrt(2.0), 0, 1)
+    rho = process.rho_fading
+    fast = rho * state.fast + jnp.sqrt(jnp.clip(1.0 - jnp.square(rho), 0.0)) * eps
+    mag = jnp.sqrt(fast[0] ** 2 + fast[1] ** 2)
+    if flat:
+        mag = jnp.broadcast_to(mag, (n, num_subcarriers))
+    log_shadow = (
+        process.rho_shadow * state.log_shadow
+        + process.shadow_walk_std
+        * client_normals(jax.random.fold_in(key, 2), ids)
+    )
+    h_mag = compose_channel_ids(mag, key, scenario, ids,
+                                walk_gain=jnp.exp(log_shadow)[:, None])
+    return h_mag, fast, log_shadow
+
+
 def evolve_availability(key, process: ChannelProcess,
-                        avail: jnp.ndarray) -> jnp.ndarray:
-    """One step of the per-client availability Markov chain (0/1 mask [N])."""
-    u = jax.random.uniform(key, avail.shape)
+                        avail: jnp.ndarray, ids=None) -> jnp.ndarray:
+    """One step of the per-client availability Markov chain (0/1 mask [N]).
+
+    ``ids`` (control_plane="sharded"): per-client content-addressed uniforms
+    instead of one full-[N] draw; ``avail`` then holds only those rows."""
+    if ids is None:
+        u = jax.random.uniform(key, avail.shape)
+    else:
+        u = client_uniforms(key, ids)
     stays = (u >= process.p_dropout).astype(jnp.float32)
     returns = (u < process.p_return).astype(jnp.float32)
     return jnp.where(avail > 0, stays, returns)
@@ -165,7 +223,7 @@ class ProcessStep(NamedTuple):
 
 def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
                  num_clients: int, num_subcarriers: int, model_size: int,
-                 scheme: str = "analog", tp=None) -> ProcessStep:
+                 scheme: str = "analog", tp=None, ids=None) -> ProcessStep:
     """Evolve fading + availability and price this round's uploads.
 
     The SINGLE implementation of the per-round process tick — the simulator's
@@ -179,12 +237,21 @@ def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
     actual cost — quantized clients afford more rounds at low ``bits``,
     digital clients pay the OFDMA rate/latency bill. The analog default is
     eqs. (3-6) verbatim.
+
+    ``ids`` (control_plane="sharded"): ``state`` holds only these clients'
+    rows and every draw is content-addressed by global id — the SAME stream
+    roles (innovation on ``k_chan``, walk on stream 2, availability on
+    stream 3), just addressed per client instead of per full-[N] array.
     """
-    h_mag, fast, log_shadow = evolve_fading(
-        k_chan, scenario, process, state, num_clients, num_subcarriers)
+    if ids is None:
+        h_mag, fast, log_shadow = evolve_fading(
+            k_chan, scenario, process, state, num_clients, num_subcarriers)
+    else:
+        h_mag, fast, log_shadow = evolve_fading_ids(
+            k_chan, scenario, process, state, ids, num_subcarriers)
     h = effective_channel(h_mag)
     avail = evolve_availability(jax.random.fold_in(k_chan, 3), process,
-                                state.avail)
+                                state.avail, ids=ids)
     e_need = uplink_energy(scheme, tp, h, model_size, scenario)
     eligible = avail * (state.battery >= e_need).astype(jnp.float32)
     return ProcessStep(h=h, e_need=e_need, avail=avail, eligible=eligible,

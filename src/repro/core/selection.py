@@ -29,11 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GCAParams
+from repro.core.channel import client_keys
 from repro.core.poe import ca_afl_logits
 
 __all__ = ["GCAParams", "EXACT_K_METHODS", "availability_logits",
-           "gumbel_topk_mask", "gumbel_topk", "topk_mask", "select_clients",
-           "select_clients_sparse", "exact_k_scores", "select_clients_pop"]
+           "client_gumbel", "gumbel_topk_mask", "gumbel_topk", "topk_mask",
+           "select_clients", "select_clients_sparse", "exact_k_scores",
+           "select_clients_pop"]
 
 # Methods whose scheduled set is bounded by a static K (lax.top_k over a
 # score vector). These — and only these — can ride the simulator's sparse
@@ -69,15 +71,27 @@ def availability_logits(avail: Optional[jnp.ndarray]) -> jnp.ndarray | float:
     return jnp.where(avail > 0, 0.0, -jnp.inf)
 
 
-def gumbel_topk(key, logits: jnp.ndarray, k: int):
-    """Sample k items w/o replacement from softmax(logits); (mask, idx)."""
-    g = jax.random.gumbel(key, logits.shape)
+def client_gumbel(key, ids: jnp.ndarray) -> jnp.ndarray:
+    """[n] Gumbel noise content-addressed by GLOBAL client id (the
+    control_plane="sharded" discipline, ``core/channel.py``): entry c is
+    gumbel(fold_in(key, ids[c])), independent of which device draws it."""
+    keys = client_keys(key, ids)
+    return jax.vmap(lambda k: jax.random.gumbel(k, ()))(keys)
+
+
+def gumbel_topk(key, logits: jnp.ndarray, k: int, ids=None):
+    """Sample k items w/o replacement from softmax(logits); (mask, idx).
+
+    ``ids``: per-client content-addressed Gumbel streams instead of one
+    full-array draw (control_plane="sharded")."""
+    g = jax.random.gumbel(key, logits.shape) if ids is None \
+        else client_gumbel(key, ids)
     return _exact_k(logits + g, k)
 
 
-def gumbel_topk_mask(key, logits: jnp.ndarray, k: int) -> jnp.ndarray:
+def gumbel_topk_mask(key, logits: jnp.ndarray, k: int, ids=None) -> jnp.ndarray:
     """Sample k items w/o replacement from softmax(logits); return 0/1 mask [N]."""
-    return gumbel_topk(key, logits, k)[0]
+    return gumbel_topk(key, logits, k, ids=ids)[0]
 
 
 def topk_mask(values: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -94,6 +108,7 @@ def select_clients(
     grad_norms: Optional[jnp.ndarray] = None,
     gca: GCAParams = GCAParams(),
     avail: Optional[jnp.ndarray] = None,
+    ids=None,
 ) -> jnp.ndarray:
     """Return participation mask [N] for the descent step.
 
@@ -106,7 +121,7 @@ def select_clients(
 
     if method in EXACT_K_METHODS:
         return select_clients_sparse(method, key, lam, h_eff, k, C=C,
-                                     avail=avail)[0]
+                                     avail=avail, ids=ids)[0]
     if method == "gca":
         if grad_norms is None:
             raise ValueError("GCA requires per-client gradient norms")
@@ -148,6 +163,7 @@ def exact_k_scores(
     h_eff: jnp.ndarray,
     C: float = 0.0,
     avail: Optional[jnp.ndarray] = None,
+    ids=None,
 ) -> jnp.ndarray:
     """The score vector [N] whose ``lax.top_k`` IS the method's selection.
 
@@ -157,6 +173,14 @@ def exact_k_scores(
     local-then-global distributed top-k — identical draws (the Gumbel noise
     consumes ``key`` exactly as before; greedy draws nothing), so the two
     paths select identically by construction.
+
+    ``ids`` (control_plane="sharded"): the inputs hold only these clients'
+    rows and the Gumbel noise is content-addressed per id
+    (:func:`client_gumbel`) — score_c depends only on (key, id_c, lam_c,
+    h_c), so any sharding of the population scores identically per client.
+    The per-client logits are already normalizer-free (``ca_afl_logits`` is
+    the *unnormalized* log of eq. (9); top-k is invariant to the softmax
+    constant), so no cross-shard reduction is needed.
     """
     a_logits = availability_logits(avail)
     if method == "fedavg":
@@ -172,7 +196,9 @@ def exact_k_scores(
     else:
         raise ValueError(
             f"sparse selection needs a static-K method, got {method!r}")
-    return logits + jax.random.gumbel(key, logits.shape)
+    g = jax.random.gumbel(key, logits.shape) if ids is None \
+        else client_gumbel(key, ids)
+    return logits + g
 
 
 def select_clients_sparse(
@@ -183,6 +209,7 @@ def select_clients_sparse(
     k: int,
     C: float = 0.0,
     avail: Optional[jnp.ndarray] = None,
+    ids=None,
 ):
     """Exact-K selection returning ``(mask [N], idx [K])``.
 
@@ -197,7 +224,8 @@ def select_clients_sparse(
     Only :data:`EXACT_K_METHODS` qualify; GCA's thresholded count is
     unbounded by ``k`` and must use the dense :func:`select_clients` path.
     """
-    mask, idx = _exact_k(exact_k_scores(method, key, lam, h_eff, C, avail), k)
+    mask, idx = _exact_k(
+        exact_k_scores(method, key, lam, h_eff, C, avail, ids=ids), k)
     if avail is not None:
         mask = mask * avail
     return mask, idx

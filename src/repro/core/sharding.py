@@ -21,15 +21,36 @@ Two embarrassingly-parallel axes of the engine are sharded here:
     (:func:`distributed_top_k`), equal to the dense ``lax.top_k`` by
     construction, tie-break included.
 
-Key discipline under sharding: every [N]-shaped control-plane draw (channels,
-Gumbel noise, batch indices, availability, process innovations) is *replicated*
-— each device draws the full-N array from the identical key and slices its
-rows — and the model-sized AWGN of eq. (10) is drawn once per leaf with the
-per-leaf key discipline of ``aircomp_aggregate_tree``. Consequence: masks, λ
-inputs, energy and every O(N) scalar are bit-identical to the single-device
-program, and the model trajectory differs only in the summation order of the
-cross-shard ``psum``. A mesh of size 1 is a structural no-op: callers skip the
-``shard_map`` wrapping entirely and compile today's exact programs.
+Key discipline under sharding — two generations, selected by the STRUCTURAL
+``FLConfig.control_plane`` field:
+
+  - ``"replicated"`` (the pre-ISSUE-7 default): every [N]-shaped
+    control-plane draw (channels, Gumbel noise, batch indices, availability,
+    process innovations) is drawn *replicated* — each device draws the full-N
+    array from the identical key and slices its rows — and the model-sized
+    AWGN of eq. (10) is drawn once per leaf with the per-leaf key discipline
+    of ``aircomp_aggregate_tree``. Masks, λ inputs, energy and every O(N)
+    scalar are bit-identical to the single-device program, and the model
+    trajectory differs only in the summation order of the cross-shard
+    ``psum``. The control plane is O(N) *per device*, which caps N.
+
+  - ``"sharded"`` (ISSUE 7): per-client draws are content-addressed by
+    GLOBAL client id (``channel.client_keys`` fold_in streams — the
+    quantizer's trick), so each device draws and stores only its N/D rows of
+    channels, availability, selection scores, batch indices and ``ChanState``
+    — O(N/D) control plane per device. Exact-K selection runs as a
+    hierarchical tree top-k (:func:`hierarchical_top_k`); the K winners'
+    batches/channels are assembled replicated via ownership-``psum``
+    (:func:`assemble_rows` — adding exact zeros, so bit-exact), and the
+    mesh run is BIT-identical to the single-device run of the same
+    discipline on every history leaf for exact-K methods
+    (``run_simulation_control_sharded``; pinned by
+    ``tests/test_control_sharded.py``). Two O(N)-scalar gathers remain by
+    necessity: the λ simplex projection (a global sort) and GCA's
+    population-wide threshold statistics.
+
+A mesh of size 1 is a structural no-op: callers skip the ``shard_map``
+wrapping entirely and compile today's exact programs.
 
 On this CPU container the mesh is realized with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see the CI
@@ -49,8 +70,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "CELL_AXIS", "CLIENT_AXIS", "cell_mesh", "client_mesh",
     "resolve_device_count", "population_device_count", "local_slice",
-    "all_gather_axis", "distributed_top_k", "shard_leading", "shard_batch",
-    "run_simulation_sharded",
+    "all_gather_axis", "distributed_top_k", "hierarchical_top_k",
+    "global_client_ids", "assemble_rows", "assemble_batch_rows",
+    "shard_leading", "shard_batch", "run_simulation_sharded",
+    "run_simulation_control_sharded", "pad_to_multiple",
 ]
 
 # Mesh axis names. "cells" parallelizes independent sweep cells (points ×
@@ -85,22 +108,58 @@ def client_mesh(n_devices: Optional[int] = None) -> Mesh:
 
 def resolve_device_count(devices) -> int:
     """Normalize a ``devices`` request: None -> 1 (single-device, today's
-    exact program), "auto" -> every local device, int -> min(int, present)."""
+    exact program), "auto" -> every local device, int -> exactly that many.
+
+    An over-request raises the same actionable error as ``_mesh`` — it used
+    to be silently clamped to the present device count, so
+    ``run_sweep(devices=16)`` on an 8-device host quietly ran 8-wide and the
+    missing parallelism surfaced only as mystery slowness much later.
+    """
     if devices is None:
         return 1
     if devices == "auto":
         return jax.device_count()
+    if isinstance(devices, bool) or not isinstance(devices, (int, np.integer)):
+        raise TypeError(
+            f"devices must be an int, 'auto' or None, got {devices!r}")
     n = int(devices)
     if n < 1:
         raise ValueError(f"devices must be >= 1, got {devices}")
-    return min(n, jax.device_count())
+    if n > jax.device_count():
+        raise ValueError(
+            f"requested {n} devices, only {jax.device_count()} present "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return n
 
 
 def population_device_count(num_clients: int,
                             devices: Optional[int] = None) -> int:
     """Largest device count <= ``devices`` (default: all) dividing N evenly —
-    population sharding keeps equal client shards per device."""
-    n_dev = devices or jax.device_count()
+    population sharding keeps equal client shards per device.
+
+    Validates its inputs: ``num_clients`` must be a positive int (0 used to
+    spin the divisor search forever) and ``devices`` must be an int or None
+    (a stray ``"auto"`` belongs to :func:`resolve_device_count`; here it
+    used to be treated as truthy garbage by the modulo).
+    """
+    if isinstance(num_clients, bool) or \
+            not isinstance(num_clients, (int, np.integer)):
+        raise TypeError(
+            f"num_clients must be an int, got {num_clients!r}")
+    if num_clients < 1:
+        raise ValueError(
+            f"num_clients must be >= 1, got {num_clients}")
+    if devices is None:
+        n_dev = jax.device_count()
+    else:
+        if isinstance(devices, bool) or \
+                not isinstance(devices, (int, np.integer)):
+            raise TypeError(
+                f"devices must be an int or None, got {devices!r} "
+                "(resolve 'auto' via resolve_device_count first)")
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        n_dev = int(devices)
     while num_clients % n_dev:
         n_dev -= 1
     return n_dev
@@ -126,29 +185,144 @@ def all_gather_axis(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     return jax.lax.all_gather(x, axis_name, tiled=True)
 
 
-def distributed_top_k(scores_local: jnp.ndarray, k: int, axis_name: str,
-                      n_global: int):
-    """Exact-K selection over a sharded score vector: ``(mask [N], idx [k])``.
+def _auto_group_size(n_shards: int) -> int:
+    """Default tree fan-in: the largest divisor of D not above sqrt(D), so
+    both gather stages carry O(sqrt(D))·k candidates. Below 16 shards the
+    flat two-level pass (group = all shards) is already minimal."""
+    if n_shards < 16:
+        return n_shards
+    best = 1
+    for g in range(2, int(n_shards ** 0.5) + 1):
+        if n_shards % g == 0:
+            best = g
+    return best if best > 1 else n_shards
 
-    Local ``lax.top_k`` of min(k, n_local) candidates per shard, then a global
-    ``lax.top_k`` over the gathered K·n_shards candidates. Equal to the dense
-    ``lax.top_k(scores, k)`` *by construction*, tie-break pinned: within a
-    shard ``lax.top_k`` emits ties lowest-index-first, and shards gather in
-    index order, so the global pass also resolves ties to the lowest global
-    index — exactly the dense semantics the masks were always built from.
-    (A shard can contribute at most n_local elements to the true top-k, so
-    min(k, n_local) candidates per shard lose nothing.)
+
+def hierarchical_top_k(scores_local: jnp.ndarray, k: int, axis_name: str,
+                       n_shards: int, group_size: Optional[int] = None
+                       ) -> jnp.ndarray:
+    """Global top-k indices [k] of a sharded score vector, tree-reduced.
+
+    Three levels — per-shard → group → global (ISSUE 7):
+
+      1. each shard ``lax.top_k``'s its own rows: kk = min(k, n_local)
+         candidates (a shard can contribute at most that many to the true
+         top-k, so nothing is lost);
+      2. shards ``all_gather`` within *contiguous groups* of ``group_size``
+         (``axis_index_groups``) and keep the group's top min(k, G·kk);
+      3. one representative gather across the groups (each device sits in
+         exactly one transposed representative group, and every member of a
+         group computed identical stage-2 results) and a final top-k.
+
+    Per-device traffic is O(G·kk + (D/G)·k) ≈ O(k·sqrt(D)) at the default
+    fan-in instead of the flat pass's O(k·D); with ``group_size`` in
+    {None at D<16, 1, D} the tree degenerates to the flat two-level pass.
+
+    Equal to dense ``lax.top_k`` *by construction*, ties included: top_k
+    emits ties lowest-index-first, groups are contiguous shard ranges
+    gathered in shard order, and representative gathers run in group order —
+    so every level resolves ties to the lowest global index, recursively
+    reproducing the dense semantics. Returns the replicated winner indices;
+    callers scatter their own (local or global) masks.
     """
     n_local = scores_local.shape[0]
     kk = min(k, n_local)
     v, i = jax.lax.top_k(scores_local, kk)
     gi = i + jax.lax.axis_index(axis_name) * n_local
-    cand_v = all_gather_axis(v, axis_name)            # [D*kk], shard order
-    cand_i = all_gather_axis(gi, axis_name)
+    g = group_size if group_size is not None else _auto_group_size(n_shards)
+    if g <= 1 or g >= n_shards or n_shards % g:
+        # flat two-level: gather all D shards' candidates at once
+        cand_v = all_gather_axis(v, axis_name)        # [D*kk], shard order
+        cand_i = all_gather_axis(gi, axis_name)
+    else:
+        n_groups = n_shards // g
+        # stage 2: contiguous groups [r·g, (r+1)·g) gather in shard order
+        groups = [[b * g + r for r in range(g)] for b in range(n_groups)]
+        vv = jax.lax.all_gather(v, axis_name, axis_index_groups=groups,
+                                tiled=True)           # [g*kk]
+        ii = jax.lax.all_gather(gi, axis_name, axis_index_groups=groups,
+                                tiled=True)
+        k2 = min(k, g * kk)
+        gv, gpos = jax.lax.top_k(vv, k2)
+        gidx = ii[gpos]
+        # stage 3: transposed representative groups — member r of every
+        # group gathers all groups' (identical per member) stage-2 winners
+        # in group order; each device appears in exactly one rep group
+        rep = [[b * g + r for b in range(n_groups)] for r in range(g)]
+        cand_v = jax.lax.all_gather(gv, axis_name, axis_index_groups=rep,
+                                    tiled=True)       # [n_groups*k2]
+        cand_i = jax.lax.all_gather(gidx, axis_name, axis_index_groups=rep,
+                                    tiled=True)
     _, pos = jax.lax.top_k(cand_v, k)
-    idx = cand_i[pos]
+    return cand_i[pos]
+
+
+def distributed_top_k(scores_local: jnp.ndarray, k: int, axis_name: str,
+                      n_global: int, group_size: Optional[int] = None):
+    """Exact-K selection over a sharded score vector: ``(mask [N], idx [k])``.
+
+    The winner indices come from :func:`hierarchical_top_k` (flat two-level
+    by default below 16 shards — the pre-tree program — and a per-shard →
+    group → global tree above, or at an explicit ``group_size``); the [N]
+    mask is their scatter. Equal to the dense ``lax.top_k(scores, k)`` by
+    construction, tie-break pinned to the lowest global index (see
+    :func:`hierarchical_top_k` for the argument). Callers that must not
+    materialize O(N) use ``hierarchical_top_k`` directly and scatter a
+    local mask.
+    """
+    n_local = scores_local.shape[0]
+    idx = hierarchical_top_k(scores_local, k, axis_name,
+                             n_shards=n_global // n_local,
+                             group_size=group_size)
     mask = jnp.zeros((n_global,), jnp.float32).at[idx].set(1.0)
     return mask, idx
+
+
+def global_client_ids(axis_name: str, n_local: int) -> jnp.ndarray:
+    """This shard's GLOBAL client ids [n_local]: d·n_local + arange."""
+    return (jax.lax.axis_index(axis_name) * n_local
+            + jnp.arange(n_local, dtype=jnp.int32))
+
+
+def assemble_rows(values_local: jnp.ndarray, idx: jnp.ndarray,
+                  axis_name: str, n_local: int) -> jnp.ndarray:
+    """Replicated [K, ...] stack of the rows at GLOBAL indices ``idx`` from a
+    row-sharded array — the ownership-``psum`` gather of the sharded control
+    plane.
+
+    Each global index is owned by exactly one shard; every shard contributes
+    its owned rows and an EXACT zero elsewhere (``jnp.where``, never
+    multiplication — 0·inf would be NaN), so the psum adds one value and
+    D−1 exact zeros per slot: bit-identical to an unsharded gather. O(K·D)
+    traffic, O(K) per-device memory.
+    """
+    off = jax.lax.axis_index(axis_name) * n_local
+    lidx = jnp.clip(idx - off, 0, n_local - 1)
+    rows = values_local[lidx]                          # [K, ...]
+    owned = (idx >= off) & (idx < off + n_local)
+    oshape = (-1,) + (1,) * (rows.ndim - 1)
+    rows = jnp.where(owned.reshape(oshape), rows, jnp.zeros_like(rows))
+    return jax.lax.psum(rows, axis_name)
+
+
+def assemble_batch_rows(shards_local: jnp.ndarray, idx: jnp.ndarray,
+                        bidx: jnp.ndarray, axis_name: str,
+                        n_local: int) -> jnp.ndarray:
+    """Replicated [K, B, ...] batch stack gathered from sharded client data.
+
+    ``shards_local`` [n_local, S, ...] is this device's client rows;
+    ``idx`` [K] global winner ids; ``bidx`` [K, B] their in-shard sample
+    indices (content-addressed by id, so any device can draw them — only the
+    data rows need the ownership-psum). Same exact-zero argument as
+    :func:`assemble_rows`.
+    """
+    off = jax.lax.axis_index(axis_name) * n_local
+    lidx = jnp.clip(idx - off, 0, n_local - 1)
+    rows = jax.vmap(lambda c, b: shards_local[c][b])(lidx, bidx)  # [K, B, ...]
+    owned = (idx >= off) & (idx < off + n_local)
+    oshape = (-1,) + (1,) * (rows.ndim - 1)
+    rows = jnp.where(owned.reshape(oshape), rows, jnp.zeros_like(rows))
+    return jax.lax.psum(rows, axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -235,8 +409,111 @@ def run_simulation_sharded(model, fl, data, mesh: Mesh, seed=None,
     return jax.jit(shard_mapped)(point, state, *sharded_data)
 
 
+def run_simulation_control_sharded(model, fl, data, mesh: Mesh, seed=None,
+                                   group_size: Optional[int] = None):
+    """Run T rounds with the CONTROL PLANE sharded over ``mesh`` (ISSUE 7).
+
+    The ``control_plane="sharded"`` discipline end to end: each device holds
+    only its N/D client rows of data, λ, ``ChanState`` and every per-round
+    draw (content-addressed by global client id — ``channel.client_keys``),
+    selection is the hierarchical tree top-k, and the K winners' batches and
+    channels are assembled replicated via ownership-``psum``. Every
+    per-client value is sharding-independent by construction (same fold_in
+    stream per id, slot assembly adds exact zeros, the tree top-k preserves
+    dense tie-breaks); what remains between this and ``run_simulation`` of
+    the same config on one device is compiler instruction selection — XLA
+    contracts mul+add chains to FMA differently for differently-shaped
+    programs — so discrete decisions (scheduled counts, masks, availability)
+    agree exactly and continuous histories to a few ulps
+    (``tests/test_control_sharded.py`` pins both). ``group_size`` tunes the
+    top-k tree fan-in (None = auto).
+
+    The scan carry stays O(model + N/D) per device; λ's simplex projection
+    (a global sort) and the [T, N] λ history are the only O(N)-scalar
+    all-gathers.
+    """
+    fn, point, sharded_data = build_control_sharded_runner(
+        model, fl, data, mesh, group_size=group_size)
+    seed = fl.seed if seed is None else seed
+    return fn(point, jax.random.PRNGKey(seed), *sharded_data)
+
+
+def build_control_sharded_runner(model, fl, data, mesh: Mesh,
+                                 group_size: Optional[int] = None):
+    """Assemble the sharded-control-plane executable without running it.
+
+    Returns ``(fn, point, sharded_data)`` where
+    ``fn(point, key, *sharded_data) -> SimHistory`` is the jitted T-round
+    scan of ``run_simulation_control_sharded``. Split out so callers that
+    need the compiled artifact itself — ``benchmarks/popscale_bench.py``
+    queries ``fn.lower(...).compile().memory_analysis()`` for the O(N/D)
+    per-device-memory ceiling — share one definition with the public runner.
+    """
+    from repro.core.simulator import (SimHistory, init_sim_state,
+                                      make_control_sharded_round_fn)
+    from repro.core.sweep import sweep_point_from_config
+
+    axis = mesh.axis_names[0]
+    n_dev = mesh.size
+    if fl.control_plane != "sharded":
+        raise ValueError(
+            "run_simulation_control_sharded needs control_plane='sharded' "
+            f"(got {fl.control_plane!r}); the replicated discipline shards "
+            "via run_simulation_sharded")
+    if fl.num_clients % n_dev:
+        raise ValueError(
+            f"population sharding needs N % devices == 0, got "
+            f"N={fl.num_clients}, devices={n_dev} "
+            "(pick a count via population_device_count)")
+    n_local = fl.num_clients // n_dev
+    point = sweep_point_from_config(fl)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    model_size = int(sum(int(np.prod(l.shape))
+                         for l in jax.tree_util.tree_leaves(shapes)))
+
+    def run(point, key, x, y, x_test, y_test):
+        # x/y/x_test/y_test arrive as this device's client rows; the state
+        # is initialized INSIDE the shard_map so λ/ChanState are born local
+        ids = global_client_ids(axis, n_local)
+        state = init_sim_state(model, fl, key, process=point.process,
+                               ids=ids)
+        round_fn = make_control_sharded_round_fn(
+            model, fl, (x, y, x_test, y_test), model_size, fl.method,
+            axis_name=axis, topk_group_size=group_size)
+        _, hist = jax.lax.scan(
+            lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
+        return hist
+
+    # every history leaf is a replicated scalar-per-round except λ, whose
+    # per-round rows live sharded and stitch to [T, N] on the way out
+    out_specs = SimHistory(
+        avg_acc=P(), worst_acc=P(), std_acc=P(), energy=P(), loss=P(),
+        num_scheduled=P(), lam=P(None, axis), avail_count=P(),
+        min_battery=P())
+    shard_mapped = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=out_specs, check_rep=False)
+    sharded_data = tuple(shard_leading(jnp.asarray(d), mesh, axis)
+                         for d in data)
+    return jax.jit(shard_mapped), point, sharded_data
+
+
 def pad_to_multiple(values: Sequence[int], multiple: int) -> list[int]:
     """Pad a seed list so its length divides the cells mesh evenly; padding
-    reuses existing entries (the padded columns are computed and discarded)."""
+    reuses existing entries (the padded columns are computed and discarded).
+
+    An empty ``values`` used to crash with ZeroDivisionError deep in the
+    modulo; a non-positive ``multiple`` would pad garbage. Both are caller
+    bugs — reject them with actionable errors.
+    """
+    if not isinstance(multiple, (int, np.integer)) or \
+            isinstance(multiple, bool) or multiple < 1:
+        raise ValueError(f"multiple must be a positive int, got {multiple!r}")
+    values = list(values)
+    if not values:
+        raise ValueError(
+            "pad_to_multiple needs at least one value to pad from "
+            "(got an empty sequence)")
     pad = (-len(values)) % multiple
-    return list(values) + [values[i % len(values)] for i in range(pad)]
+    return values + [values[i % len(values)] for i in range(pad)]

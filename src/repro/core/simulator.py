@@ -58,14 +58,19 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core.aircomp import (aircomp_aggregate_stack_tree,
                                 aircomp_aggregate_tree, aircomp_psum_tree)
-from repro.core.channel import draw_channels_scenario, effective_channel
-from repro.core.dro import lambda_ascent
+from repro.core.channel import (client_keys, draw_channels_scenario,
+                                draw_channels_scenario_ids, effective_channel)
+from repro.core.dro import lambda_ascent, project_simplex
 from repro.core.dynamics import (commit_process, init_chan_state,
-                                 process_from_config, step_process)
+                                 init_chan_state_ids, process_from_config,
+                                 step_process)
 from repro.core.selection import (EXACT_K_METHODS, availability_logits,
-                                  gumbel_topk, select_clients,
-                                  select_clients_pop, select_clients_sparse)
-from repro.core.sharding import all_gather_axis, local_slice
+                                  client_gumbel, exact_k_scores, gumbel_topk,
+                                  select_clients, select_clients_pop,
+                                  select_clients_sparse)
+from repro.core.sharding import (all_gather_axis, assemble_batch_rows,
+                                 assemble_rows, hierarchical_top_k,
+                                 local_slice)
 from repro.core import transport as transport_mod
 from repro.core.transport import (TRANSPORTS, quantized_aggregate_psum_tree,
                                   quantized_aggregate_stack_tree)
@@ -184,6 +189,19 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
     partial-sum + ``psum`` (``aircomp.aircomp_psum_tree``). Dense/GCA rounds
     only: the selected-K gather path stays single-device.
     """
+    if fl.control_plane == "sharded":
+        if dense:
+            raise ValueError(
+                "control_plane='sharded' has a single per-method program "
+                "(the slot path IS the reference); dense=True selects the "
+                "replicated-discipline [N, model] path only")
+        return make_control_sharded_round_fn(
+            model, fl, data, model_size, method, noise_free=noise_free,
+            axis_name=axis_name)
+    if fl.control_plane != "replicated":
+        raise ValueError(
+            f"unknown control_plane {fl.control_plane!r}; "
+            "pick 'replicated' or 'sharded'")
     x, y, x_test, y_test = data
     n = fl.num_clients
     shard = y.shape[1]
@@ -477,6 +495,335 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
     return round_fn
 
 
+def _batch_indices_ids(key, ids, shard_size, batch_size):
+    """[n, B] in-shard sample indices, content-addressed per client id.
+
+    Row c is ``randint(fold_in(key, ids[c]), ...)`` — a function of (key,
+    id) only, so any device can (re)draw any client's batch indices. The
+    control_plane="sharded" replacement for :func:`_batch_indices`'s full-[N]
+    draw: a shard draws only its own rows, and the selected-K slot gathers
+    re-draw just the K winners' rows from the same streams.
+    """
+    keys = client_keys(key, ids)
+    return jax.vmap(
+        lambda k: jax.random.randint(k, (batch_size,), 0, shard_size))(keys)
+
+
+def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
+                                  model_size: int, method: str,
+                                  noise_free: bool | None = None,
+                                  axis_name: str | None = None,
+                                  topk_group_size: int | None = None):
+    """Build ``round_fn(point, state, t)`` under the SHARDED control plane.
+
+    The O(N)-replicated discipline of :func:`make_param_round_fn` draws every
+    per-client random vector at full [N] on every device. Here each device
+    materializes only its own ``n_local`` rows of channels, availability,
+    selection scores, λ and batch indices, with every draw content-addressed
+    by GLOBAL client id (``channel.client_keys`` / ``selection.client_gumbel``
+    / :func:`_batch_indices_ids`) — so the unsharded program
+    (``ids = arange(N)``) and the mesh-sharded one (``ids`` = this shard's
+    rows) specify identical per-client values by construction. (The two
+    compiled programs agree to compiler instruction selection: XLA's FMA
+    contraction differs across program shapes, worth a few ulps on
+    transcendental-adjacent values — integer draws and all discrete
+    decisions built from them agree exactly.)
+
+    Exact-K methods select via ``sharding.hierarchical_top_k`` (per-shard →
+    group → global tree reduction, O(n_local + K·log D) per device) and run
+    the gather-compute-scatter hot path with slot assembly: each winner's
+    row/batch is owned by exactly one shard, contributed as
+    ``where(owned, v, 0)`` and ``psum``-assembled — adding exact zeros, so
+    slots are bit-identical to a single-device gather. Model-sized [K] work
+    then runs replicated on every device (it is O(K·model), independent
+    of N). GCA keeps its dense per-client probe on local rows, gathering only
+    the O(N) norm/channel scalars for its population-wide threshold.
+
+    ``state.lam`` is the LOCAL λ slice [n_local]; the simplex projection is
+    the one unavoidable global O(N) step (gather → project → re-slice).
+    ``axis_name=None`` builds the unsharded reference program the
+    differential tests pin the mesh program against.
+    """
+    x, y, x_test, y_test = data
+    n = fl.num_clients
+    shard = y.shape[1]
+    if noise_free is None:
+        noise_free = fl.noise_std == 0
+    pop = axis_name is not None
+    scheme = fl.transport
+    if scheme not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {scheme!r}; pick one of {TRANSPORTS}")
+    if method != "gca" and method not in EXACT_K_METHODS:
+        raise ValueError(f"unknown selection method {method!r}")
+    n_rows = y.shape[0]  # == n unless mesh-sharded
+    n_shards = n // n_rows if pop else 1
+    kk = fl.clients_per_round
+    grad_fn = jax.grad(model.loss)
+    vloss = jax.vmap(model.loss, in_axes=(None, 0, 0))
+    vacc = jax.vmap(model.accuracy, in_axes=(None, 0, 0))
+    vgrad_clients = jax.vmap(grad_fn, in_axes=(None, 0, 0))
+    temporal = fl.temporal
+
+    def local_update(w, eta, xb, yb):
+        def body(wc, _):
+            g = grad_fn(wc, xb, yb)
+            return jax.tree.map(lambda p, gg: p - eta * gg, wc, g), None
+
+        wc, _ = jax.lax.scan(body, w, None, length=fl.local_steps)
+        return wc
+
+    def local_update_rest(w1, eta, xb, yb):
+        def body(wc, _):
+            g = grad_fn(wc, xb, yb)
+            return jax.tree.map(lambda p, gg: p - eta * gg, wc, g), None
+
+        wc, _ = jax.lax.scan(body, w1, None, length=fl.local_steps - 1)
+        return wc
+
+    def topk_idx(scores):
+        """Global top-k indices [K] of a (sharded) score vector."""
+        if pop:
+            return hierarchical_top_k(scores, kk, axis_name, n_shards,
+                                      group_size=topk_group_size)
+        return jax.lax.top_k(scores, kk)[1]
+
+    def slot_vals(vals, idx):
+        """vals[idx] across shards: each index is owned by exactly one
+        shard; psum of where(owned, v, 0) adds exact zeros — bit-identical
+        to the single-device gather."""
+        if pop:
+            return assemble_rows(vals, idx, axis_name, n_rows)
+        return vals[idx]
+
+    def slot_batches(arr, idx, bidx):
+        if pop:
+            return assemble_batch_rows(arr, idx, bidx, axis_name, n_rows)
+        return jax.vmap(lambda c, b: jnp.asarray(arr)[c][b])(idx, bidx)
+
+    def round_fn(point, state: SimState, t):
+        key, k_chan, k_sel, k_batch, k_noise, k_asel, k_abatch = jax.random.split(state.key, 7)
+        scen = point.scenario
+        proc = point.process
+        off = jax.lax.axis_index(axis_name) * n_rows if pop else 0
+        ids = off + jnp.arange(n_rows, dtype=jnp.int32)
+
+        def scatter_slots(idx, wvals):
+            """[K] slot values → local [n_rows] scatter (owned slots only)."""
+            lidx = jnp.clip(idx - off, 0, n_rows - 1)
+            owned = (idx >= off) & (idx < off + n_rows)
+            return jnp.zeros((n_rows,), wvals.dtype).at[lidx].add(
+                jnp.where(owned, wvals, jnp.zeros_like(wvals)))
+
+        # ---- physical layer: per-id channel draws (only this shard's rows)
+        if temporal:
+            cs = state.chan_state
+            pstep = step_process(k_chan, scen, proc, cs, n_rows,
+                                 fl.num_subcarriers, model_size,
+                                 scheme=scheme, tp=point.transport, ids=ids)
+            h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
+        else:
+            h = effective_channel(
+                draw_channels_scenario_ids(k_chan, scen, ids,
+                                           fl.num_subcarriers))
+            avail = eligible = None
+
+        eta = point.lr0 * (point.lr_decay ** t)
+        noise_std = 0.0 if noise_free else scen.noise_std
+
+        if method == "gca":
+            # dense per-client probe on local rows; the probe batch IS the
+            # descent batch (grads0 reused as SGD step 1, as in the
+            # replicated program)
+            bidx_all = _batch_indices_ids(k_batch, ids, shard, fl.batch_size)
+            xb = jax.vmap(lambda xc, ic: xc[ic])(x, bidx_all)
+            yb = jax.vmap(lambda yc, ic: yc[ic])(y, bidx_all)
+            grads0 = vgrad_clients(state.w, xb, yb)
+            gnorms = jax.vmap(
+                lambda g: jnp.sqrt(
+                    sum(jnp.sum(jnp.square(l))
+                        for l in jax.tree_util.tree_leaves(g))
+                )
+            )(grads0)
+            if pop:
+                # GCA's threshold statistics (mean/median/max) are
+                # population-wide: gather the O(N) control scalars
+                gnorms_f = all_gather_axis(gnorms, axis_name)
+                h_f = all_gather_axis(h, axis_name)
+                elig_f = (all_gather_axis(eligible, axis_name)
+                          if temporal else None)
+            else:
+                gnorms_f, h_f, elig_f = gnorms, h, eligible
+            mask_f = select_clients("gca", k_sel, jnp.zeros_like(h_f), h_f,
+                                    kk, grad_norms=gnorms_f, gca=point.gca,
+                                    avail=elig_f)
+            mask_l = local_slice(mask_f, axis_name, n_rows) if pop else mask_f
+            num_sched = jnp.sum(mask_f)
+            k_denom = jnp.maximum(num_sched, 1.0)
+
+            w1 = jax.vmap(
+                lambda g: jax.tree.map(lambda p, gg: p - eta * gg, state.w, g)
+            )(grads0)
+            if fl.local_steps > 1:
+                w_stack = jax.vmap(local_update_rest,
+                                   in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
+            else:
+                w_stack = w1
+            if scheme == "quantized":
+                if pop:
+                    w_new = quantized_aggregate_psum_tree(
+                        state.w, w_stack, mask_l, ids, k_noise, noise_std,
+                        point.transport.bits, k_denom, axis_name)
+                else:
+                    w_new = quantized_aggregate_stack_tree(
+                        state.w, w_stack, mask_l, ids, k_noise, noise_std,
+                        point.transport.bits, k_denom)
+            else:
+                eff_noise = 0.0 if scheme == "digital" else noise_std
+                if pop:
+                    w_new = aircomp_psum_tree(w_stack, mask_l, k_noise,
+                                              eff_noise, k_denom, axis_name)
+                else:
+                    w_new = aircomp_aggregate_tree(w_stack, mask_l, k_noise,
+                                                   eff_noise, k_denom)
+            # GCA can schedule nobody (thresholding / gating): keep w
+            any_sched = num_sched > 0
+            w_new = jax.tree.map(
+                lambda agg, old: jnp.where(any_sched, agg, old),
+                w_new, state.w)
+            e_local = transport_mod.round_energy(
+                scheme, point.transport, h, mask_l, model_size, scen)
+            e_round = jax.lax.psum(e_local, axis_name) if pop else e_local
+        else:
+            # ---- exact-K: sharded scores → hierarchical top-k → slot path.
+            # λ enters per-client (normalizer-free logits), so local lam
+            # rows score identically to the dense program's.
+            scores = exact_k_scores(method, k_sel, state.lam, h,
+                                    C=point.energy_C, avail=eligible, ids=ids)
+            sel_idx = topk_idx(scores)
+            # availability/battery-gated slots keep their index, weight 0
+            sel_w = (slot_vals(eligible, sel_idx) if temporal
+                     else jnp.ones((kk,), jnp.float32))
+            num_sched = jnp.sum(sel_w)
+            k_denom = jnp.maximum(num_sched, 1.0)
+            mask_l = scatter_slots(sel_idx, sel_w)
+
+            bidx_sel = _batch_indices_ids(k_batch, sel_idx, shard,
+                                          fl.batch_size)
+            xb_s = slot_batches(x, sel_idx, bidx_sel)
+            yb_s = slot_batches(y, sel_idx, bidx_sel)
+            # O(K·model) work, replicated on every device — independent of N
+            w_sel = jax.vmap(local_update,
+                             in_axes=(None, None, 0, 0))(state.w, eta,
+                                                         xb_s, yb_s)
+            if scheme == "quantized":
+                w_new = quantized_aggregate_stack_tree(
+                    state.w, w_sel, sel_w, sel_idx, k_noise, noise_std,
+                    point.transport.bits, k_denom)
+            else:
+                w_new = aircomp_aggregate_stack_tree(
+                    w_sel, sel_w, k_noise,
+                    0.0 if scheme == "digital" else noise_std, k_denom)
+            if temporal:
+                any_sched = num_sched > 0
+                w_new = jax.tree.map(
+                    lambda agg, old: jnp.where(any_sched, agg, old),
+                    w_new, state.w)
+            # energy ledger as a [K]-slot sum — same shape and op order
+            # sharded and unsharded, so the ledger is bit-identical
+            h_sel = slot_vals(h, sel_idx)
+            e_round = jnp.sum(sel_w * transport_mod.uplink_energy(
+                scheme, point.transport, h_sel, model_size, scen))
+        energy = state.energy + e_round
+
+        # ---- temporal carry (local rows only)
+        if temporal:
+            chan_state = commit_process(pstep, cs, mask_l)
+            ac = jnp.sum(eligible)
+            avail_count = jax.lax.psum(ac, axis_name) if pop else ac
+            mb = jnp.min(chan_state.battery)
+            min_battery = jax.lax.pmin(mb, axis_name) if pop else mb
+        else:
+            chan_state = state.chan_state
+            avail_count = jnp.float32(n)
+            min_battery = jnp.float32(jnp.inf)
+
+        # ---- ascent on λ: uniform-K of the available clients, per-id
+        # Gumbel streams, hierarchical top-k over the sharded scores
+        ascores = (jnp.zeros((n_rows,)) + availability_logits(avail)
+                   + client_gumbel(k_asel, ids))
+        asc_idx = topk_idx(ascores)
+        a_gate = (slot_vals(avail, asc_idx) if temporal
+                  else jnp.ones((kk,), jnp.float32))
+        if method == "gca":
+            # dense per-client losses on local rows (GCA keeps the [N]
+            # loss vector; ascent and sel_loss read it locally)
+            bidx_ab = _batch_indices_ids(k_abatch, ids, shard, fl.batch_size)
+            xab = jax.vmap(lambda xc, ic: xc[ic])(x, bidx_ab)
+            yab = jax.vmap(lambda yc, ic: yc[ic])(y, bidx_ab)
+            losses_l = vloss(w_new, xab, yab)
+            amask_l = scatter_slots(asc_idx, a_gate)
+            asc_contrib = amask_l * losses_l
+            sl = jnp.sum(mask_l * losses_l)
+            sel_loss = (jax.lax.psum(sl, axis_name) if pop else sl) / k_denom
+        else:
+            # slot path: losses only where consumed (ascent + descent slots)
+            bidx_a = _batch_indices_ids(k_abatch, asc_idx, shard,
+                                        fl.batch_size)
+            xa = slot_batches(x, asc_idx, bidx_a)
+            ya = slot_batches(y, asc_idx, bidx_a)
+            asc_losses = vloss(w_new, xa, ya)
+            asc_contrib = scatter_slots(asc_idx, a_gate * asc_losses)
+            bidx_d = _batch_indices_ids(k_abatch, sel_idx, shard,
+                                        fl.batch_size)
+            xd = slot_batches(x, sel_idx, bidx_d)
+            yd = slot_batches(y, sel_idx, bidx_d)
+            sel_loss = jnp.sum(sel_w * vloss(w_new, xd, yd)) / k_denom
+        lam_tilde = state.lam + point.ascent_lr * asc_contrib
+        if pop:
+            # the one unavoidable global O(N) step: the simplex projection
+            # couples all coordinates (sort-based threshold)
+            lam_new = local_slice(
+                project_simplex(all_gather_axis(lam_tilde, axis_name)),
+                axis_name, n_rows)
+        else:
+            lam_new = project_simplex(lam_tilde)
+
+        # ---- metrics (local eval rows, gathered for the stats)
+        def eval_accs():
+            accs = vacc(w_new, x_test, y_test)
+            return all_gather_axis(accs, axis_name) if pop else accs
+
+        if fl.eval_every == 1:
+            accs = eval_accs()
+            stats = jnp.stack([jnp.mean(accs), jnp.min(accs), jnp.std(accs)])
+            eval_cache = state.eval_cache
+        else:
+            def fresh_eval(_):
+                accs = eval_accs()
+                return jnp.stack([jnp.mean(accs), jnp.min(accs),
+                                  jnp.std(accs)])
+
+            stats = jax.lax.cond(t % fl.eval_every == 0, fresh_eval,
+                                 lambda _: state.eval_cache, None)
+            eval_cache = stats
+        metrics = SimHistory(
+            avg_acc=stats[0],
+            worst_acc=stats[1],
+            std_acc=stats[2],
+            energy=energy,
+            loss=sel_loss,
+            num_scheduled=num_sched,
+            lam=lam_new,  # LOCAL rows; out_specs concatenate to [T, N]
+            avail_count=avail_count,
+            min_battery=min_battery,
+        )
+        return SimState(w_new, lam_new, energy, key, chan_state,
+                        eval_cache), metrics
+
+    return round_fn
+
+
 def make_round_fn(model: SimModel, fl: FLConfig, data, model_size: int):
     """Back-compat wrapper: bind ``fl``'s own knobs, return (state, t) -> ..."""
     from repro.core.sweep import sweep_point_from_config  # local: avoid cycle
@@ -487,28 +834,48 @@ def make_round_fn(model: SimModel, fl: FLConfig, data, model_size: int):
 
 
 def init_sim_state(model: SimModel, fl: FLConfig, key,
-                   process=None) -> SimState:
+                   process=None, ids=None) -> SimState:
     """Initial carry. ``process`` (a traced ``ChannelProcess``, e.g. from a
     ``SweepPoint``) overrides the one derived from ``fl`` so traced knobs like
     ``battery_init`` ride the sweep's vmap axis; static scenarios get the
-    leaf-less ``chan_state = ()`` and an unchanged key stream."""
+    leaf-less ``chan_state = ()`` and an unchanged key stream.
+
+    ``ids`` (control_plane="sharded" only): the GLOBAL client ids whose rows
+    this state holds — λ and ``chan_state`` are initialized for just those
+    rows, with per-id draws (``dynamics.init_chan_state_ids``) so a shard's
+    slice is bit-identical to the same rows of the unsharded state. Defaults
+    to ``arange(N)`` (the unsharded reference) under the sharded discipline.
+    """
     k_init, k_run = jax.random.split(key)
     w0 = model.init(k_init)
     if process is None:
         process = process_from_config(fl)
+    sharded_cp = fl.control_plane == "sharded"
+    if ids is not None and not sharded_cp:
+        raise ValueError(
+            "ids is a control_plane='sharded' argument; the replicated "
+            "discipline always initializes the full [N] state")
+    if sharded_cp and ids is None:
+        ids = jnp.arange(fl.num_clients, dtype=jnp.int32)
     chan_state = ()
     if process.temporal:
         # fold_in: an independent stream, so the static path's k_init/k_run
         # consumption (and therefore its trajectories) is untouched
-        chan_state = init_chan_state(
-            process, jax.random.fold_in(k_init, 1), fl.num_clients,
-            fl.num_subcarriers, fl.flat_fading)
+        k_cs = jax.random.fold_in(k_init, 1)
+        if sharded_cp:
+            chan_state = init_chan_state_ids(
+                process, k_cs, ids, fl.num_subcarriers, fl.flat_fading)
+        else:
+            chan_state = init_chan_state(
+                process, k_cs, fl.num_clients, fl.num_subcarriers,
+                fl.flat_fading)
+    n_rows = fl.num_clients if ids is None else ids.shape[0]
     # round 0 always evaluates (0 % eval_every == 0), so the zeros are never
     # read — the slot just keeps the carry static-shape
     eval_cache = () if fl.eval_every == 1 else jnp.zeros((3,), jnp.float32)
     return SimState(
         w=w0,
-        lam=jnp.full((fl.num_clients,), 1.0 / fl.num_clients),
+        lam=jnp.full((n_rows,), 1.0 / fl.num_clients),
         energy=jnp.zeros(()),
         key=k_run,
         chan_state=chan_state,
@@ -539,6 +906,10 @@ def run_simulation(
     from repro.core.sweep import sweep_point_from_config  # local: avoid cycle
 
     if mesh is not None and mesh.size > 1:
+        if fl.control_plane == "sharded":
+            from repro.core.sharding import run_simulation_control_sharded
+            return run_simulation_control_sharded(model, fl, data, mesh,
+                                                  seed=seed)
         from repro.core.sharding import run_simulation_sharded
         return run_simulation_sharded(model, fl, data, mesh, seed=seed,
                                       dense=True)

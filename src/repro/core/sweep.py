@@ -117,10 +117,13 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
 # uplink aggregation/energy program (core/transport.py): each scheme is its
 # own group per method, every scheme KNOB (bits, powers, bandwidth) stays
 # traced, and "analog" compiles to exactly the pre-transport program.
+# `control_plane` selects the per-client randomness discipline (replicated
+# full-[N] draws vs per-id fold_in streams + slot assembly, core/simulator.py)
+# — two different programs with different key consumption.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
     "num_subcarriers", "flat_fading", "temporal", "eval_every", "transport",
-    "method",
+    "method", "control_plane",
 )
 
 

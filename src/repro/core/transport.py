@@ -56,7 +56,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core.aircomp import flat_awgn, stack_accum_dtype
-from repro.core.energy import transmit_energy
+from repro.core.energy import TRUNCATION_FLOOR, transmit_energy
 from repro.kernels.aircomp.ops import quant_aircomp_flat
 
 __all__ = [
@@ -132,7 +132,7 @@ def transport_from_config(fl: FLConfig) -> TransportParams:
 _MIN_RATE = 1e-12
 
 
-def digital_rate(h_eff, tp: TransportParams, floor=0.05):
+def digital_rate(h_eff, tp: TransportParams, floor=TRUNCATION_FLOOR):
     """Per-client Shannon rate r_i = B·log2(1 + P·|h_i|²/N₀) (bits/s).
 
     ``floor`` guards the deep fade exactly like the analog path's truncation
@@ -146,7 +146,8 @@ def digital_rate(h_eff, tp: TransportParams, floor=0.05):
     return jnp.maximum(tp.bandwidth * jnp.log2(1.0 + snr), _MIN_RATE)
 
 
-def digital_latency(h_eff, model_size: int, tp: TransportParams, floor=0.05):
+def digital_latency(h_eff, model_size: int, tp: TransportParams,
+                    floor=TRUNCATION_FLOOR):
     """Symbol-time latency of one upload: t_i = M·32 / r_i (seconds).
 
     The digital PS decodes the EXACT full-precision update, so the payload
@@ -159,7 +160,8 @@ def digital_latency(h_eff, model_size: int, tp: TransportParams, floor=0.05):
     return model_size * ANALOG_BITS / digital_rate(h_eff, tp, floor)
 
 
-def digital_energy(h_eff, model_size: int, tp: TransportParams, floor=0.05):
+def digital_energy(h_eff, model_size: int, tp: TransportParams,
+                   floor=TRUNCATION_FLOOR):
     """Per-client digital upload energy E_i = P · t_i (Sun et al. accounting).
 
     Monotone increasing in the payload size (model bits M·32) and decreasing

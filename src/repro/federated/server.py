@@ -28,11 +28,13 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import FLConfig
-from repro.core.channel import (draw_channels_scenario, effective_channel,
+from repro.core.channel import (draw_channels_scenario,
+                                draw_channels_scenario_ids, effective_channel,
                                 scenario_from_config)
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
-                                 process_from_config, step_process)
+                                 init_chan_state_ids, process_from_config,
+                                 step_process)
 from repro.core import transport as transport_mod
 from repro.core.selection import (EXACT_K_METHODS, availability_logits,
                                   gumbel_topk_mask, select_clients,
@@ -108,6 +110,15 @@ class ParameterServer:
         # identically across tiers; ditto the temporal ChannelProcess.
         self.scenario = scenario_from_config(fl)
         self.process = process_from_config(fl)
+        # control_plane="sharded": the cross-tier contract tracks the
+        # simulator's per-id fold_in streams (core/channel.py) — the PS is
+        # single-host, so its id vector is simply the full population
+        if fl.control_plane not in ("replicated", "sharded"):
+            raise ValueError(
+                f"unknown control_plane {fl.control_plane!r}; "
+                "pick 'replicated' or 'sharded'")
+        self._ids = (jnp.arange(fl.num_clients, dtype=jnp.int32)
+                     if fl.control_plane == "sharded" else None)
         self._model_size = None  # resolved lazily from the params pytree
         # GCA needs per-client gradient norms BEFORE selection: a dedicated
         # jitted probe at the current params (fixes the former ValueError).
@@ -254,10 +265,15 @@ class ParameterServer:
         self._model_size = tree_size(params)
         chan_state = ()
         if self.process.temporal:
-            chan_state = init_chan_state(
-                self.process, jax.random.fold_in(k_init, 1),
-                self.fl.num_clients, self.fl.num_subcarriers,
-                self.fl.flat_fading)
+            k_cs = jax.random.fold_in(k_init, 1)
+            if self._ids is not None:
+                chan_state = init_chan_state_ids(
+                    self.process, k_cs, self._ids, self.fl.num_subcarriers,
+                    self.fl.flat_fading)
+            else:
+                chan_state = init_chan_state(
+                    self.process, k_cs, self.fl.num_clients,
+                    self.fl.num_subcarriers, self.fl.flat_fading)
         return ServerState(
             params=params,
             opt_state=self.optimizer.init(params),
@@ -288,8 +304,12 @@ class ParameterServer:
             pstep = step_process(k_chan, self.scenario, self.process, cs,
                                  fl.num_clients, fl.num_subcarriers,
                                  self._model_size, scheme=fl.transport,
-                                 tp=self.transport)
+                                 tp=self.transport, ids=self._ids)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
+        elif self._ids is not None:
+            h = effective_channel(draw_channels_scenario_ids(
+                k_chan, self.scenario, self._ids, fl.num_subcarriers))
+            avail = eligible = None
         else:
             h = effective_channel(draw_channels_scenario(
                 k_chan, self.scenario, fl.num_clients, fl.num_subcarriers))
@@ -311,7 +331,7 @@ class ParameterServer:
             # ledger/λ bookkeeping, the indices for the gather round
             mask, idx = select_clients_sparse(
                 fl.method, k_sel, state.lam, h, fl.clients_per_round,
-                C=fl.energy_C, avail=eligible)
+                C=fl.energy_C, avail=eligible, ids=self._ids)
             if self._delta_probe is not None:
                 # quantized transport: per-client deltas for the rounding
                 try:
@@ -383,7 +403,7 @@ class ParameterServer:
         # --- λ-ascent on a uniform K-subset of the AVAILABLE clients -------
         amask = gumbel_topk_mask(
             k_asel, jnp.zeros((fl.num_clients,)) + availability_logits(avail),
-            fl.clients_per_round)
+            fl.clients_per_round, ids=self._ids)
         if avail is not None:
             amask = amask * avail
         lam = lambda_ascent(state.lam, metrics.client_losses, amask, fl.ascent_lr)

@@ -1,0 +1,206 @@
+"""Single-device regression suite for ISSUE 7's satellite fixes.
+
+Runs in the tier-1 fast lane (no multi-device mesh needed):
+
+  - ``sharding.resolve_device_count`` raises the same actionable error as
+    ``_mesh`` on an over-request instead of silently clamping;
+  - ``sharding.pad_to_multiple`` / ``population_device_count`` validate
+    their inputs (the empty-seed ZeroDivisionError, the N=0 infinite loop,
+    the stray ``"auto"`` treated as truthy garbage);
+  - the §IV-A truncation floor 0.05 has exactly ONE definition
+    (``energy.TRUNCATION_FLOOR``) — ``transport.py`` used to hard-code the
+    literal in its three ``digital_*`` signatures, so changing the paper
+    constant in one place silently desynchronized the digital scheme;
+  - the ``control_plane`` structural knob validates its value and its
+    argument coupling.
+"""
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import energy, sharding, transport
+from repro.core.simulator import init_sim_state, make_param_round_fn
+from repro.models.logreg import logistic_regression
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# resolve_device_count: over-request must raise, not clamp
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_device_count_over_request_raises():
+    n = jax.device_count()
+    with pytest.raises(ValueError, match=rf"requested {n + 1} devices"):
+        sharding.resolve_device_count(n + 1)
+
+
+def test_resolve_device_count_matches_mesh_error():
+    # the satellite's contract: resolve_device_count and _mesh agree — both
+    # raise (neither clamps) and both name the present device count
+    n = jax.device_count()
+    with pytest.raises(ValueError, match=rf"only {n} present"):
+        sharding.resolve_device_count(n + 3)
+    with pytest.raises(ValueError):
+        sharding._mesh(n + 3, "cells")
+
+
+@pytest.mark.parametrize("bad", ["8", 2.0, True, [4]])
+def test_resolve_device_count_rejects_non_int(bad):
+    with pytest.raises(TypeError, match="devices must be"):
+        sharding.resolve_device_count(bad)
+
+
+def test_resolve_device_count_valid_inputs():
+    assert sharding.resolve_device_count(None) == 1
+    assert sharding.resolve_device_count("auto") == jax.device_count()
+    assert sharding.resolve_device_count(1) == 1
+    with pytest.raises(ValueError, match=">= 1"):
+        sharding.resolve_device_count(0)
+
+
+# ---------------------------------------------------------------------------
+# population_device_count / pad_to_multiple input validation
+# ---------------------------------------------------------------------------
+
+
+def test_population_device_count_rejects_zero_clients():
+    # used to never terminate: the divisor search decremented from D toward
+    # a modulus that 0 satisfies for no positive divisor ordering
+    with pytest.raises(ValueError, match="num_clients must be >= 1"):
+        sharding.population_device_count(0)
+    with pytest.raises(ValueError, match="num_clients"):
+        sharding.population_device_count(-4, 8)
+
+
+@pytest.mark.parametrize("bad", ["auto", "8", 2.5, True])
+def test_population_device_count_rejects_non_int_devices(bad):
+    with pytest.raises(TypeError, match="devices must be"):
+        sharding.population_device_count(16, bad)
+
+
+def test_population_device_count_auto_hint_names_resolver():
+    with pytest.raises(TypeError, match="resolve_device_count"):
+        sharding.population_device_count(16, "auto")
+
+
+def test_population_device_count_divisor_search():
+    assert sharding.population_device_count(16, 8) == 8
+    assert sharding.population_device_count(12, 8) == 6
+    assert sharding.population_device_count(7, 8) == 7
+    assert sharding.population_device_count(13, 8) == 1
+    with pytest.raises(ValueError, match="devices must be >= 1"):
+        sharding.population_device_count(16, 0)
+
+
+def test_pad_to_multiple_rejects_empty():
+    # used to crash with ZeroDivisionError deep in the modulo
+    with pytest.raises(ValueError, match="at least one value"):
+        sharding.pad_to_multiple([], 4)
+
+
+@pytest.mark.parametrize("bad", [0, -2, 1.5, "4", True])
+def test_pad_to_multiple_rejects_bad_multiple(bad):
+    with pytest.raises(ValueError, match="multiple must be"):
+        sharding.pad_to_multiple([1, 2], bad)
+
+
+def test_pad_to_multiple_pads_cyclically():
+    assert sharding.pad_to_multiple([5, 7, 9], 4) == [5, 7, 9, 5]
+    assert sharding.pad_to_multiple([1], 3) == [1, 1, 1]
+    assert sharding.pad_to_multiple([1, 2], 2) == [1, 2]
+    assert sharding.pad_to_multiple([1, 2], 1) == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Truncation floor: single source of truth (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_truncation_floor_literal_defined_once():
+    """The NUMBER token 0.05 appears exactly once in src/repro/core — the
+    TRUNCATION_FLOOR definition in energy.py. transport.py used to repeat it
+    as three keyword defaults (comments/docstrings citing the paper's value
+    are prose, not a second source of truth, and don't count)."""
+    import io
+    import tokenize
+
+    hits = []
+    for path in sorted((SRC / "core").glob("*.py")):
+        toks = tokenize.generate_tokens(
+            io.StringIO(path.read_text()).readline)
+        for tok in toks:
+            if tok.type == tokenize.NUMBER and float(tok.string) == 0.05:
+                hits.append(f"{path.name}:{tok.start[0]}")
+    assert hits == ["energy.py:25"], hits
+
+
+def test_transport_digital_defaults_are_truncation_floor():
+    import inspect
+
+    for fn in (transport.digital_rate, transport.digital_latency,
+               transport.digital_energy):
+        sig = inspect.signature(fn)
+        assert sig.parameters["floor"].default is energy.TRUNCATION_FLOOR, \
+            f"{fn.__name__} floor default is not energy.TRUNCATION_FLOOR"
+
+
+def test_config_floor_default_matches_energy_constant():
+    # configs/base.py cannot import core (cycle through core/__init__), so
+    # its channel_floor default is pinned here instead
+    assert FLConfig().channel_floor == energy.TRUNCATION_FLOOR
+
+
+# ---------------------------------------------------------------------------
+# control_plane knob validation
+# ---------------------------------------------------------------------------
+
+
+def _tiny():
+    return FLConfig(num_clients=4, clients_per_round=2, rounds=1,
+                    batch_size=2)
+
+
+def test_control_plane_rejects_unknown_value():
+    fl = FLConfig(num_clients=4, clients_per_round=2, rounds=1, batch_size=2,
+                  control_plane="bogus")
+    model = logistic_regression(dim=8, num_classes=2)
+    with pytest.raises(ValueError, match="control_plane"):
+        make_param_round_fn(model, fl, (None,) * 4, 10, "fedavg")
+
+
+def test_control_plane_sharded_rejects_dense():
+    from dataclasses import replace
+
+    fl = replace(_tiny(), control_plane="sharded")
+    model = logistic_regression(dim=8, num_classes=2)
+    with pytest.raises(ValueError, match="dense"):
+        make_param_round_fn(model, fl, (None,) * 4, 10, "fedavg", dense=True)
+
+
+def test_init_sim_state_ids_needs_sharded_control_plane():
+    model = logistic_regression(dim=8, num_classes=2)
+    with pytest.raises(ValueError, match="control_plane"):
+        init_sim_state(model, _tiny(), jax.random.PRNGKey(0),
+                       ids=jnp.arange(4))
+
+
+def test_init_sim_state_sharded_local_rows():
+    from dataclasses import replace
+
+    fl = replace(_tiny(), control_plane="sharded",
+                 temporal=True, rho_fading=0.9)
+    model = logistic_regression(dim=8, num_classes=2)
+    st = init_sim_state(model, fl, jax.random.PRNGKey(0),
+                        ids=jnp.arange(2, dtype=jnp.int32))
+    assert st.lam.shape == (2,)
+    assert float(jnp.sum(st.lam)) == pytest.approx(0.5)  # rows of the 1/N simplex
+    assert st.chan_state.battery.shape == (2,)
+    # the same two rows of the full-population init, bit-for-bit (the
+    # content-addressing contract)
+    full = init_sim_state(model, fl, jax.random.PRNGKey(0))
+    assert (st.chan_state.fast == full.chan_state.fast[:, :2]).all()
