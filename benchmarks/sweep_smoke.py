@@ -44,7 +44,15 @@ def main():
     specs = sweep.expand_grid(
         fl,
         variants={"afl": {"method": "afl"},
-                  "ca_afl_c8": {"method": "ca_afl", "energy_C": 8.0}},
+                  "ca_afl_c8": {"method": "ca_afl", "energy_C": 8.0},
+                  # the sharded control plane rides the sweep too (ISSUE 8):
+                  # under the multi-device lane this cell factors onto the
+                  # 2-D cells × clients mesh (psum-bisection λ projection +
+                  # hierarchical top-k inside the donated group jit), so the
+                  # composed path can't rot; single-device it runs the
+                  # unsharded reference program of the same discipline
+                  "ca_afl_sharded": {"method": "ca_afl",
+                                     "control_plane": "sharded"}},
         # battery_constrained exercises the temporal ChannelProcess path
         # (core/dynamics.py): one extra compilation group per method, and the
         # BENCH_sweep.json artifact gains live min_battery/avail_count columns

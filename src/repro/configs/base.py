@@ -135,6 +135,15 @@ class FLConfig:
     # between, so the O(N · test-set) eval stops dominating long runs where
     # only the selected K clients do model-sized descent work per round.
     eval_every: int = 1
+    # λ-history recording cadence (STRUCTURAL: joins the sweep compilation-
+    # group signature, following the `eval_every` precedent). 1 = the dense
+    # per-round [T, N] ``SimHistory.lam`` — today's programs bit-for-bit.
+    # E > 1 records strided [ceil(T/E), N] snapshots (rounds t % E == 0) via
+    # a fixed-size scan-carry buffer; 0 drops the λ history leaf entirely
+    # (the leaf-less ``()``), so an N=10^6 × T=500 run stops costing 2 GB of
+    # history. The O(T) λ summary leaves (max / entropy / effective support
+    # size) are recorded per round at EVERY setting.
+    record_lambda_every: int = 1
     # channel / physical layer
     num_subcarriers: int = 64       # N_sc
     flat_fading: bool = True        # paper §IV-A: flat-fading channel block

@@ -5,22 +5,50 @@ on K uniformly sampled clients, then projects back onto the simplex:
 
     λ~_i = λ_i + γ f_i(w̄; ξ~_i)   for i in U^(t)
     λ    = Π_Δ(λ~)
+
+Two projections implement Π_Δ:
+
+  - :func:`project_simplex` — the sort-based Held-Wolfe-Crowder / Duchi
+    reference, O(N log N) and inherently global (the cumulative sum couples
+    every coordinate). The replicated control plane uses it, and it is the
+    small-N differential oracle the distributed projection is pinned against.
+  - ``sharding.project_simplex_sharded`` — bisection on the water level θ
+    (the root of the monotone g(θ) = Σ max(vᵢ − θ, 0) − 1): each device sums
+    its own rows, one ``psum`` per iteration yields the global g, O(N/D +
+    iters) per device with no gather and no sort. The
+    ``control_plane="sharded"`` discipline routes here on BOTH tiers
+    (simulator round and ``ParameterServer``), keeping the cross-tier λ
+    contract intact.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def project_simplex(v: jnp.ndarray) -> jnp.ndarray:
     """Euclidean projection of v onto the probability simplex (sort-based,
-    Held-Wolfe-Crowder / Duchi et al. algorithm; O(N log N))."""
+    Held-Wolfe-Crowder / Duchi et al. algorithm; O(N log N)).
+
+    The cumulative sum and the θ reduction accumulate at f64 internally
+    (cast back to the input dtype on exit): an f32 ``cumsum`` over N=10^6
+    near-uniform entries drifts by ~N·ulp — enough to flip the support-size
+    predicate ``u_k + (1 - css_k)/k > 0`` near ties and pick the wrong ρ,
+    which moves probability mass between clients. ``canonicalize_dtype``
+    keeps the promotion a no-op under the engine's default x64-disabled
+    mode (bit-for-bit today's program); with ``jax_enable_x64`` on, the
+    projection matches the f64 oracle at any N
+    (``tests/test_lambda_control.py``).
+    """
     n = v.shape[0]
-    u = jnp.sort(v)[::-1]
+    acc_dt = jax.dtypes.canonicalize_dtype(np.float64)
+    u = jnp.sort(v)[::-1].astype(acc_dt)
     css = jnp.cumsum(u)
-    k = jnp.arange(1, n + 1, dtype=v.dtype)
+    k = jnp.arange(1, n + 1, dtype=acc_dt)
     cond = u + (1.0 - css) / k > 0
     rho = jnp.max(jnp.where(cond, k, 0.0))
-    theta = (jnp.sum(jnp.where(cond, u, 0.0)) - 1.0) / rho
+    theta = ((jnp.sum(jnp.where(cond, u, 0.0)) - 1.0) / rho).astype(v.dtype)
     return jnp.maximum(v - theta, 0.0)
 
 
@@ -29,11 +57,50 @@ def lambda_ascent(
     losses: jnp.ndarray,
     ascent_mask: jnp.ndarray,
     gamma: float,
+    *,
+    local_rows: bool = False,
+    axis_name: str | None = None,
 ) -> jnp.ndarray:
     """One ascent step of Alg. 1: update entries in U^(t), project to simplex.
 
     losses: [N] per-client stochastic losses f_i(w̄; ξ~) (only entries where
     ascent_mask==1 are used).
+
+    ``local_rows`` / ``axis_name`` select the projection by row discipline
+    (the ``control_plane="sharded"`` flag, ISSUE 8): when either is set,
+    ``lam``/``losses``/``ascent_mask`` hold only this device's client rows
+    and the projection is the psum-bisection
+    ``sharding.project_simplex_sharded`` — ``axis_name`` names the clients
+    mesh axis (None = all rows on one device, the unsharded reference
+    program of the same discipline, used by ``ParameterServer``). The
+    default routes to the sort-based :func:`project_simplex`, bit-for-bit
+    the replicated-discipline program.
     """
     lam_tilde = lam + gamma * ascent_mask * losses
+    if local_rows or axis_name is not None:
+        from repro.core.sharding import project_simplex_sharded  # no cycle
+        return project_simplex_sharded(lam_tilde, axis_name=axis_name)
     return project_simplex(lam_tilde)
+
+
+def lambda_summary(lam: jnp.ndarray, axis_name: str | None = None):
+    """O(1) λ diagnostics from (possibly sharded) rows: ``(max, entropy,
+    effective support size)``.
+
+    Computed as psum/pmax-of-local-rows — the distributed-projection rule
+    (README "sharding contract"): never gather-then-reduce. The effective
+    support size is the participation ratio 1/Σλ² (N for uniform λ, 1 for a
+    point mass) — a smooth statistic, unlike a strict positive-count, so the
+    mesh and unsharded programs agree to ulps rather than flipping on
+    coordinates that sit exactly at the water level. Entropy uses the
+    0·log 0 = 0 convention via a safe log.
+    """
+    lmax = jnp.max(lam)
+    plogp = lam * jnp.log(jnp.where(lam > 0, lam, 1.0))
+    ent = -jnp.sum(plogp)
+    sq = jnp.sum(jnp.square(lam))
+    if axis_name is not None:
+        lmax = jax.lax.pmax(lmax, axis_name)
+        ent = jax.lax.psum(ent, axis_name)
+        sq = jax.lax.psum(sq, axis_name)
+    return lmax, ent, 1.0 / jnp.maximum(sq, jnp.finfo(lam.dtype).tiny)

@@ -181,6 +181,15 @@ def exact_k_scores(
     The per-client logits are already normalizer-free (``ca_afl_logits`` is
     the *unnormalized* log of eq. (9); top-k is invariant to the softmax
     constant), so no cross-shard reduction is needed.
+
+    This per-id independence is what lets the scoring vmap over the sweep
+    engine's 2-D ``cells × clients`` mesh (ISSUE 8): each sweep cell folds
+    its own key into the SAME per-id streams, so moving a client row between
+    mesh columns — or adding/removing cell rows — never changes any draw.
+    λ itself reaches here as local rows projected by the psum-bisection
+    ``sharding.project_simplex_sharded`` under that discipline; the scores
+    consume it element-wise, preserving the rule that nothing on the scoring
+    path materializes an O(N) array per device.
     """
     a_logits = availability_logits(avail)
     if method == "fedavg":

@@ -45,9 +45,10 @@ Key discipline under sharding — two generations, selected by the STRUCTURAL
     mesh run is BIT-identical to the single-device run of the same
     discipline on every history leaf for exact-K methods
     (``run_simulation_control_sharded``; pinned by
-    ``tests/test_control_sharded.py``). Two O(N)-scalar gathers remain by
-    necessity: the λ simplex projection (a global sort) and GCA's
-    population-wide threshold statistics.
+    ``tests/test_control_sharded.py``). The λ simplex projection runs as a
+    shard-local bisection on the water level (:func:`project_simplex_sharded`
+    — psum-of-local-rows, no gather, no sort; ISSUE 8), so the only O(N)
+    gather left is GCA's population-wide threshold statistics.
 
 A mesh of size 1 is a structural no-op: callers skip the ``shard_map``
 wrapping entirely and compile today's exact programs.
@@ -69,11 +70,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "CELL_AXIS", "CLIENT_AXIS", "cell_mesh", "client_mesh",
+    "cells_clients_mesh", "factor_client_devices",
     "resolve_device_count", "population_device_count", "local_slice",
     "all_gather_axis", "distributed_top_k", "hierarchical_top_k",
-    "global_client_ids", "assemble_rows", "assemble_batch_rows",
-    "shard_leading", "shard_batch", "run_simulation_sharded",
-    "run_simulation_control_sharded", "pad_to_multiple",
+    "project_simplex_sharded", "global_client_ids", "assemble_rows",
+    "assemble_batch_rows", "shard_leading", "shard_batch",
+    "run_simulation_sharded", "run_simulation_control_sharded",
+    "control_sharded_cell_run", "build_control_sharded_runner",
+    "pad_to_multiple",
 ]
 
 # Mesh axis names. "cells" parallelizes independent sweep cells (points ×
@@ -104,6 +108,66 @@ def cell_mesh(n_devices: Optional[int] = None) -> Mesh:
 def client_mesh(n_devices: Optional[int] = None) -> Mesh:
     """1-D ``"clients"`` mesh over the first ``n_devices`` (default: all)."""
     return _mesh(n_devices or jax.device_count(), CLIENT_AXIS)
+
+
+def cells_clients_mesh(n_devices: int, client_devices: int) -> Mesh:
+    """2-D ``("cells", "clients")`` mesh: ``n_devices // client_devices``
+    rows of sweep cells × ``client_devices`` columns of client shards, so a
+    sweep grid and the client populations inside its cells shard
+    simultaneously (ISSUE 8 — ``run_sweep`` factors its device budget here).
+    """
+    devs = jax.devices()
+    if n_devices > len(devs):
+        raise ValueError(
+            f"requested {n_devices} devices, only {len(devs)} present "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    if isinstance(client_devices, bool) or \
+            not isinstance(client_devices, (int, np.integer)) or \
+            client_devices < 1:
+        raise ValueError(
+            f"client_devices must be a positive int, got {client_devices!r}")
+    if n_devices % client_devices:
+        raise ValueError(
+            f"client_devices must divide the device count evenly, got "
+            f"{client_devices} of {n_devices}")
+    arr = np.array(devs[:n_devices]).reshape(
+        n_devices // client_devices, client_devices)
+    return Mesh(arr, (CELL_AXIS, CLIENT_AXIS))
+
+
+def factor_client_devices(num_clients: int, n_devices: int,
+                          client_devices=None) -> int:
+    """The ``clients``-axis extent of a 2-D sweep mesh: an explicit request
+    (validated — it must divide both the device count and N) or, by default,
+    the LARGEST divisor of ``n_devices`` that also divides ``num_clients``
+    (maximal population sharding, the million-client north star; remaining
+    devices parallelize sweep cells). Always >= 1 — a population no divisor
+    fits degrades to pure cell sharding, never an error.
+    """
+    if isinstance(num_clients, bool) or \
+            not isinstance(num_clients, (int, np.integer)) or num_clients < 1:
+        raise ValueError(
+            f"num_clients must be a positive int, got {num_clients!r}")
+    if client_devices is not None:
+        if isinstance(client_devices, bool) or \
+                not isinstance(client_devices, (int, np.integer)) or \
+                client_devices < 1:
+            raise ValueError(
+                f"client_devices must be a positive int or None, got "
+                f"{client_devices!r}")
+        c = int(client_devices)
+        if n_devices % c:
+            raise ValueError(
+                f"client_devices={c} must divide devices={n_devices} evenly")
+        if num_clients % c:
+            raise ValueError(
+                f"client_devices={c} must divide num_clients={num_clients} "
+                "evenly (equal client shards per device)")
+        return c
+    for c in range(n_devices, 0, -1):
+        if n_devices % c == 0 and num_clients % c == 0:
+            return c
+    return 1
 
 
 def resolve_device_count(devices) -> int:
@@ -278,6 +342,67 @@ def distributed_top_k(scores_local: jnp.ndarray, k: int, axis_name: str,
     return mask, idx
 
 
+def project_simplex_sharded(v_local: jnp.ndarray,
+                            axis_name: Optional[str] = None,
+                            iters: int = 64) -> jnp.ndarray:
+    """Euclidean simplex projection of a row-sharded vector — bisection on
+    the water level θ, the distributed replacement for the sort-based
+    ``dro.project_simplex`` (ISSUE 8).
+
+    θ* is the unique root of the monotone-decreasing piecewise-linear
+    g(θ) = Σᵢ max(vᵢ − θ, 0) − 1: each device sums ``max(v_local − θ, 0)``
+    over its own N/D rows and one ``psum`` per iteration yields the global
+    g — O(N/D + iters) per device with NO gather and NO sort, following the
+    distributed-projection rule (psum-of-local-rows, never
+    gather-then-reduce). The initial bracket [vmax − 1, vmax] always
+    contains θ*: g(vmax) = −1 < 0, and g(vmax − 1) ≥ vmax − (vmax − 1) − 1
+    = 0. ``iters=64`` halvings of the unit-width bracket pin the SUPPORT
+    SET {i : vᵢ > θ*} (a discrete object, robust to θ jitter); a final
+    closed-form polish then recomputes θ from that support —
+    θ = (Σ_supp vᵢ − 1) / |supp|, one more psum pair — which is EXACTLY the
+    sort-based reference's θ formula with ρ = |supp|, so the result matches
+    it to ≤1e-6 relative at any input magnitude (raw bisection alone
+    saturates at ulp(vmax), ~4e-6 already at vmax ≈ 40; pinned by
+    ``tests/test_lambda_control.py``).
+
+    ``axis_name=None`` runs the identical program on unsharded rows (local
+    sums only) — the single-device reference of the sharded discipline, so
+    the mesh and no-mesh programs differ only by psum summation order.
+    −inf rows are legal (they project to exact 0, as under the sort); the
+    projection is undefined when every row is −inf/+inf, exactly as for the
+    sort-based reference.
+    """
+    v = v_local
+    vmax = jnp.max(v)
+    if axis_name is not None:
+        vmax = jax.lax.pmax(vmax, axis_name)
+
+    def g(theta):
+        s = jnp.sum(jnp.maximum(v - theta, 0.0))
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        return s - 1.0
+
+    def body(_, bracket):
+        lo, hi = bracket
+        mid = 0.5 * (lo + hi)
+        above = g(mid) > 0          # θ* lies right of mid
+        return (jnp.where(above, mid, lo), jnp.where(above, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (vmax - 1.0, vmax))
+    # support-set polish: >= keeps the argmax in support even if the
+    # collapsed bracket rounds to vmax itself, and a row sitting exactly AT
+    # the water level contributes θ* to both sums, leaving θ unchanged
+    supp = v >= 0.5 * (lo + hi)
+    cnt = jnp.sum(supp.astype(v.dtype))
+    ssum = jnp.sum(jnp.where(supp, v, 0.0))
+    if axis_name is not None:
+        cnt = jax.lax.psum(cnt, axis_name)
+        ssum = jax.lax.psum(ssum, axis_name)
+    theta = (ssum - 1.0) / cnt
+    return jnp.maximum(v - theta, 0.0)
+
+
 def global_client_ids(axis_name: str, n_local: int) -> jnp.ndarray:
     """This shard's GLOBAL client ids [n_local]: d·n_local + arange."""
     return (jax.lax.axis_index(axis_name) * n_local
@@ -396,8 +521,12 @@ def run_simulation_sharded(model, fl, data, mesh: Mesh, seed=None,
         round_fn = make_param_round_fn(
             model, fl, (x, y, x_test, y_test), model_size, fl.method,
             dense=dense, axis_name=axis)
-        _, hist = jax.lax.scan(
+        final, hist = jax.lax.scan(
             lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
+        if fl.record_lambda_every > 1:
+            # strided λ snapshots ride the scan carry, not the per-round
+            # stacked outputs (lax.scan cannot emit [T/E] stacks)
+            hist = hist._replace(lam=final.lam_snaps)
         return hist
 
     shard_mapped = shard_map(
@@ -428,9 +557,12 @@ def run_simulation_control_sharded(model, fl, data, mesh: Mesh, seed=None,
     (``tests/test_control_sharded.py`` pins both). ``group_size`` tunes the
     top-k tree fan-in (None = auto).
 
-    The scan carry stays O(model + N/D) per device; λ's simplex projection
-    (a global sort) and the [T, N] λ history are the only O(N)-scalar
-    all-gathers.
+    The scan carry stays O(model + N/D) per device; the λ simplex projection
+    is the psum-bisection :func:`project_simplex_sharded` (O(N/D + iters)
+    per device) and the λ history is strided/elidable via
+    ``FLConfig.record_lambda_every``, so no O(N) array lands on any single
+    device during a round — only the host-side [T, N] stitch of the λ
+    history output remains at ``record_lambda_every=1``.
     """
     fn, point, sharded_data = build_control_sharded_runner(
         model, fl, data, mesh, group_size=group_size)
@@ -449,8 +581,6 @@ def build_control_sharded_runner(model, fl, data, mesh: Mesh,
     queries ``fn.lower(...).compile().memory_analysis()`` for the O(N/D)
     per-device-memory ceiling — share one definition with the public runner.
     """
-    from repro.core.simulator import (SimHistory, init_sim_state,
-                                      make_control_sharded_round_fn)
     from repro.core.sweep import sweep_point_from_config
 
     axis = mesh.axis_names[0]
@@ -471,32 +601,72 @@ def build_control_sharded_runner(model, fl, data, mesh: Mesh,
     model_size = int(sum(int(np.prod(l.shape))
                          for l in jax.tree_util.tree_leaves(shapes)))
 
-    def run(point, key, x, y, x_test, y_test):
-        # x/y/x_test/y_test arrive as this device's client rows; the state
-        # is initialized INSIDE the shard_map so λ/ChanState are born local
-        ids = global_client_ids(axis, n_local)
-        state = init_sim_state(model, fl, key, process=point.process,
-                               ids=ids)
-        round_fn = make_control_sharded_round_fn(
-            model, fl, (x, y, x_test, y_test), model_size, fl.method,
-            axis_name=axis, topk_group_size=group_size)
-        _, hist = jax.lax.scan(
-            lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
-        return hist
-
-    # every history leaf is a replicated scalar-per-round except λ, whose
-    # per-round rows live sharded and stitch to [T, N] on the way out
-    out_specs = SimHistory(
-        avg_acc=P(), worst_acc=P(), std_acc=P(), energy=P(), loss=P(),
-        num_scheduled=P(), lam=P(None, axis), avail_count=P(),
-        min_battery=P())
+    run = control_sharded_cell_run(model, fl, fl.method, axis, n_local,
+                                   model_size, group_size=group_size)
     shard_mapped = shard_map(
         run, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=out_specs, check_rep=False)
+        out_specs=control_sharded_history_specs(fl, axis), check_rep=False)
     sharded_data = tuple(shard_leading(jnp.asarray(d), mesh, axis)
                          for d in data)
     return jax.jit(shard_mapped), point, sharded_data
+
+
+def control_sharded_cell_run(model, fl, method: str, axis_name,
+                             n_local: int, model_size: int,
+                             noise_free=None, group_size=None):
+    """The shared per-cell body of the sharded control plane:
+    ``run(point, key, x, y, x_test, y_test) -> SimHistory`` over THIS
+    device's client rows, with the state initialized inside (λ/ChanState
+    born local, ids = this shard's global client ids).
+
+    One definition serves both meshes (ISSUE 8): the 1-D clients mesh of
+    :func:`build_control_sharded_runner` wraps it in ``shard_map`` directly,
+    and the sweep engine's 2-D ``cells × clients`` group runner ``vmap``s it
+    over stacked points × seeds inside the donated per-group jit —
+    collectives on the clients axis vmap over the cells batch unchanged.
+    ``axis_name=None`` builds the unsharded reference program of the same
+    discipline. The strided λ snapshot buffer (``record_lambda_every > 1``)
+    rides the scan carry and is attached as ``hist.lam`` on the way out.
+    """
+    from repro.core.simulator import (init_sim_state,
+                                      make_control_sharded_round_fn)
+
+    def run(point, key, x, y, x_test, y_test):
+        ids = (global_client_ids(axis_name, n_local)
+               if axis_name is not None
+               else jnp.arange(n_local, dtype=jnp.int32))
+        state = init_sim_state(model, fl, key, process=point.process,
+                               ids=ids)
+        round_fn = make_control_sharded_round_fn(
+            model, fl, (x, y, x_test, y_test), model_size, method,
+            noise_free=noise_free, axis_name=axis_name,
+            topk_group_size=group_size)
+        final, hist = jax.lax.scan(
+            lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
+        if fl.record_lambda_every > 1:
+            hist = hist._replace(lam=final.lam_snaps)
+        return hist
+
+    return run
+
+
+def control_sharded_history_specs(fl, axis: str, lead: Sequence = ()):
+    """``shard_map`` out_specs for a sharded-control-plane ``SimHistory``:
+    every leaf is a replicated scalar-per-round except λ, whose rows live
+    sharded on their LAST axis and stitch back to global client order
+    (``[T, N]`` dense at ``record_lambda_every=1``, ``[ceil(T/E), N]``
+    strided at E > 1, the leaf-less ``()`` at E = 0 — the spec on an empty
+    subtree is inert). ``lead`` prefixes batch axes (the sweep group
+    runner's ``[points, seeds]`` leading dims)."""
+    from repro.core.simulator import SimHistory
+
+    rep = P(*lead)
+    lam = rep if fl.record_lambda_every == 0 else P(*lead, None, axis)
+    return SimHistory(
+        avg_acc=rep, worst_acc=rep, std_acc=rep, energy=rep, loss=rep,
+        num_scheduled=rep, lam=lam, avail_count=rep, min_battery=rep,
+        lam_max=rep, lam_entropy=rep, lam_ess=rep)
 
 
 def pad_to_multiple(values: Sequence[int], multiple: int) -> list[int]:

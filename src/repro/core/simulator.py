@@ -60,7 +60,7 @@ from repro.core.aircomp import (aircomp_aggregate_stack_tree,
                                 aircomp_aggregate_tree, aircomp_psum_tree)
 from repro.core.channel import (client_keys, draw_channels_scenario,
                                 draw_channels_scenario_ids, effective_channel)
-from repro.core.dro import lambda_ascent, project_simplex
+from repro.core.dro import lambda_ascent, lambda_summary
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  init_chan_state_ids, process_from_config,
                                  step_process)
@@ -70,7 +70,7 @@ from repro.core.selection import (EXACT_K_METHODS, availability_logits,
                                   select_clients_sparse)
 from repro.core.sharding import (all_gather_axis, assemble_batch_rows,
                                  assemble_rows, hierarchical_top_k,
-                                 local_slice)
+                                 local_slice, project_simplex_sharded)
 from repro.core import transport as transport_mod
 from repro.core.transport import (TRANSPORTS, quantized_aggregate_psum_tree,
                                   quantized_aggregate_stack_tree)
@@ -91,6 +91,12 @@ class SimState(NamedTuple):
     # (forward-filled between evals); the leaf-less () when eval_every == 1,
     # so the per-round-eval program is carried unchanged.
     eval_cache: Any = ()
+    # [ceil(T/E), n_rows] strided λ snapshot buffer when
+    # record_lambda_every = E > 1 (lax.scan cannot emit strided stacked
+    # outputs, so the snapshots ride the carry and the runner attaches the
+    # final buffer as SimHistory.lam); the leaf-less () at E in {0, 1}, so
+    # the dense-recording program is carried unchanged.
+    lam_snaps: Any = ()
 
 
 class SimHistory(NamedTuple):
@@ -100,9 +106,43 @@ class SimHistory(NamedTuple):
     energy: jnp.ndarray     # [T] cumulative
     loss: jnp.ndarray       # [T] mean train loss of selected set
     num_scheduled: jnp.ndarray  # [T]
-    lam: jnp.ndarray        # [T, N]
+    # λ history on the record_lambda_every cadence: [T, N] dense at E=1
+    # (today's per-round rows, bit-for-bit), [ceil(T/E), N] snapshots of
+    # rounds t % E == 0 at E > 1, the leaf-less () at E=0
+    lam: Any
     avail_count: jnp.ndarray  # [T] schedulable clients (avail ∧ battery-ok)
     min_battery: jnp.ndarray  # [T] min remaining Joules (inf when static)
+    # always-on O(T) λ diagnostics (dro.lambda_summary — psum-of-local-rows
+    # under the sharded control plane): max weight, Shannon entropy, and the
+    # effective support size 1/Σλ² (participation ratio)
+    lam_max: jnp.ndarray      # [T]
+    lam_entropy: jnp.ndarray  # [T]
+    lam_ess: jnp.ndarray      # [T]
+
+
+def _record_lambda(fl: FLConfig, state: SimState, lam_new, t):
+    """The λ recording step of a round body: ``(lam history leaf, lam_snaps
+    carry)`` under the STRUCTURAL ``fl.record_lambda_every`` cadence.
+
+    E=1 emits the full row as a per-round scan output (the dense [T, N]
+    history, today's program bit-for-bit, with an untouched () carry slot);
+    E>1 emits a leaf-less () and instead writes row ``t // E`` of the
+    fixed-size carry buffer on rounds t % E == 0 (``lax.cond`` +
+    ``dynamic_update_slice``, so the buffer is updated in place under the
+    scan's donation); E=0 records nothing at all.
+    """
+    e = fl.record_lambda_every
+    if e == 1:
+        return lam_new, state.lam_snaps
+    if e == 0:
+        return (), state.lam_snaps
+    snaps = jax.lax.cond(
+        t % e == 0,
+        lambda buf: jax.lax.dynamic_update_slice_in_dim(
+            buf, lam_new[None].astype(buf.dtype), t // e, axis=0),
+        lambda buf: buf,
+        state.lam_snaps)
+    return (), snaps
 
 
 def _batch_indices(key, n, shard_size, batch_size):
@@ -455,6 +495,8 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                 losses = all_gather_axis(losses, axis_name)
             sel_loss = jnp.sum(mask * losses) / k_denom
         lam_new = lambda_ascent(state.lam, losses, amask, point.ascent_lr)
+        lam_max, lam_entropy, lam_ess = lambda_summary(lam_new)
+        lam_hist, lam_snaps = _record_lambda(fl, state, lam_new, t)
 
         # ---- metrics: the full N-client test-set eval runs on the
         # eval_every cadence (forward-filled in between); everything else is
@@ -485,12 +527,15 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             energy=energy,
             loss=sel_loss,
             num_scheduled=jnp.sum(mask),
-            lam=lam_new,
+            lam=lam_hist,
             avail_count=avail_count,
             min_battery=min_battery,
+            lam_max=lam_max,
+            lam_entropy=lam_entropy,
+            lam_ess=lam_ess,
         )
         return SimState(w_new, lam_new, energy, key, chan_state,
-                        eval_cache), metrics
+                        eval_cache, lam_snaps), metrics
 
     return round_fn
 
@@ -780,14 +825,14 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             yd = slot_batches(y, sel_idx, bidx_d)
             sel_loss = jnp.sum(sel_w * vloss(w_new, xd, yd)) / k_denom
         lam_tilde = state.lam + point.ascent_lr * asc_contrib
-        if pop:
-            # the one unavoidable global O(N) step: the simplex projection
-            # couples all coordinates (sort-based threshold)
-            lam_new = local_slice(
-                project_simplex(all_gather_axis(lam_tilde, axis_name)),
-                axis_name, n_rows)
-        else:
-            lam_new = project_simplex(lam_tilde)
+        # the simplex projection couples all coordinates, but only through
+        # the scalar water level θ: psum-bisection keeps it O(N/D + iters)
+        # per device with no gather and no sort (ISSUE 8)
+        lam_new = project_simplex_sharded(
+            lam_tilde, axis_name=axis_name if pop else None)
+        lam_max, lam_entropy, lam_ess = lambda_summary(
+            lam_new, axis_name if pop else None)
+        lam_hist, lam_snaps = _record_lambda(fl, state, lam_new, t)
 
         # ---- metrics (local eval rows, gathered for the stats)
         def eval_accs():
@@ -814,12 +859,15 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             energy=energy,
             loss=sel_loss,
             num_scheduled=num_sched,
-            lam=lam_new,  # LOCAL rows; out_specs concatenate to [T, N]
+            lam=lam_hist,  # LOCAL rows; out_specs concatenate to [T, N]
             avail_count=avail_count,
             min_battery=min_battery,
+            lam_max=lam_max,
+            lam_entropy=lam_entropy,
+            lam_ess=lam_ess,
         )
         return SimState(w_new, lam_new, energy, key, chan_state,
-                        eval_cache), metrics
+                        eval_cache, lam_snaps), metrics
 
     return round_fn
 
@@ -873,6 +921,14 @@ def init_sim_state(model: SimModel, fl: FLConfig, key,
     # round 0 always evaluates (0 % eval_every == 0), so the zeros are never
     # read — the slot just keeps the carry static-shape
     eval_cache = () if fl.eval_every == 1 else jnp.zeros((3,), jnp.float32)
+    e = fl.record_lambda_every
+    if not isinstance(e, int) or isinstance(e, bool) or e < 0:
+        raise ValueError(
+            f"record_lambda_every must be an int >= 0, got {e!r}")
+    # E in {0, 1} needs no snapshot carry (dense recording / no recording);
+    # E > 1 carries the fixed [ceil(T/E), n_rows] strided buffer
+    lam_snaps = () if e in (0, 1) else jnp.zeros(
+        ((fl.rounds + e - 1) // e, n_rows), jnp.float32)
     return SimState(
         w=w0,
         lam=jnp.full((n_rows,), 1.0 / fl.num_clients),
@@ -880,6 +936,7 @@ def init_sim_state(model: SimModel, fl: FLConfig, key,
         key=k_run,
         chan_state=chan_state,
         eval_cache=eval_cache,
+        lam_snaps=lam_snaps,
     )
 
 
@@ -923,8 +980,12 @@ def run_simulation(
 
     @jax.jit
     def run(point, state):
-        _, hist = jax.lax.scan(
+        final, hist = jax.lax.scan(
             lambda s, t: round_fn(point, s, t), state, jnp.arange(fl.rounds))
+        if fl.record_lambda_every > 1:
+            # the strided snapshots ride the carry; attach the final buffer
+            # as the history's λ leaf (scan can't emit strided stacks)
+            hist = hist._replace(lam=final.lam_snaps)
         return hist
 
     return run(point, state)

@@ -120,10 +120,13 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
 # `control_plane` selects the per-client randomness discipline (replicated
 # full-[N] draws vs per-id fold_in streams + slot assembly, core/simulator.py)
 # — two different programs with different key consumption.
+# `record_lambda_every` changes the λ-history sub-program (per-round scan
+# output vs cond-gated strided snapshot carry vs no history leaf at all), so
+# cells with different cadences cannot share an executable.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
     "num_subcarriers", "flat_fading", "temporal", "eval_every", "transport",
-    "method", "control_plane",
+    "method", "control_plane", "record_lambda_every",
 )
 
 
@@ -231,6 +234,10 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
         final, hist = jax.lax.scan(
             lambda s, t: round_fn(point, s, t), state,
             jnp.arange(fl_static.rounds))
+        if fl_static.record_lambda_every > 1:
+            # strided λ snapshots ride the scan carry (lax.scan cannot emit
+            # [T/E] stacks); attach the final buffer as the history's λ leaf
+            hist = hist._replace(lam=final.lam_snaps)
         return final, hist
 
     def batched(points, states):
@@ -256,6 +263,51 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
     return jax.jit(init_batched), jax.jit(batched, donate_argnums=(1,))
 
 
+def _build_sharded_group_runner(model, fl_static: FLConfig, data, method: str,
+                                mesh, noise_free: bool, model_size: int):
+    """One jitted executable for a ``control_plane="sharded"`` group on the
+    2-D ``cells × clients`` mesh (ISSUE 8): ``fn(points [S], seeds [R],
+    *sharded_data) -> SimHistory`` with leading [S, R] axes.
+
+    The per-cell body is ``sharding.control_sharded_cell_run`` — the SAME
+    function the 1-D client-mesh runner shard_maps — vmapped over stacked
+    points × seeds inside ``shard_map``: the seed axis splits over the
+    ``cells`` mesh rows while every client-row collective (psum-bisection
+    projection, hierarchical top-k, ownership-psum assembly, eq. (10)) runs
+    on the ``clients`` columns and vmaps over the cell batch unchanged. The
+    state is initialized INSIDE the body (λ/ChanState born as local rows),
+    so no [N]-sized array exists per device at any point — there is no
+    donated init stack to build, unlike :func:`_build_runner`.
+    """
+    P = PartitionSpec
+    cell_ax, client_ax = mesh.axis_names
+    n_client_dev = mesh.shape[client_ax]
+    n_local = fl_static.num_clients // n_client_dev
+    cell_run = sharding.control_sharded_cell_run(
+        model, fl_static, method, client_ax, n_local, model_size,
+        noise_free=noise_free)
+
+    def run_cells(points, seeds, x, y, x_test, y_test):
+        # same compile-counter side effect as _build_runner.batched
+        _TRACE_LOG.append(method)
+
+        def one(point, seed):
+            return cell_run(point, jax.random.PRNGKey(seed),
+                            x, y, x_test, y_test)
+
+        over_seeds = jax.vmap(one, in_axes=(None, 0))
+        return jax.vmap(over_seeds, in_axes=(0, None))(points, seeds)
+
+    mapped = shard_map(
+        run_cells, mesh=mesh,
+        in_specs=(P(), P(cell_ax), P(client_ax), P(client_ax), P(client_ax),
+                  P(client_ax)),
+        out_specs=sharding.control_sharded_history_specs(
+            fl_static, client_ax, lead=(None, cell_ax)),
+        check_rep=False)
+    return jax.jit(mapped)
+
+
 def _grid_fingerprint(specs, seeds) -> np.ndarray:
     """A [32] uint8 digest of the full grid — labels, every config field
     (traced knobs included), seed list and order. Stored inside the resume
@@ -273,11 +325,15 @@ def _history_template(fl: FLConfig, num_seeds: int) -> SimHistory:
     """Zero-filled [R, T(, N)] SimHistory with the shapes/dtypes run_sweep
     produces — the restore template of the checkpoint resume hook."""
     r, t, n = num_seeds, fl.rounds, fl.num_clients
+    e = fl.record_lambda_every
     z = lambda *shape: np.zeros(shape, np.float32)  # noqa: E731
+    lam = () if e == 0 else (z(r, t, n) if e == 1
+                             else z(r, (t + e - 1) // e, n))
     return SimHistory(avg_acc=z(r, t), worst_acc=z(r, t), std_acc=z(r, t),
                       energy=z(r, t), loss=z(r, t), num_scheduled=z(r, t),
-                      lam=z(r, t, n), avail_count=z(r, t),
-                      min_battery=z(r, t))
+                      lam=lam, avail_count=z(r, t),
+                      min_battery=z(r, t), lam_max=z(r, t),
+                      lam_entropy=z(r, t), lam_ess=z(r, t))
 
 
 def run_sweep(
@@ -286,6 +342,7 @@ def run_sweep(
     specs: Sequence[Tuple[str, FLConfig]],
     seeds: Sequence[int] = (0,),
     devices=None,
+    client_devices: Optional[int] = None,
     checkpoint_dir: Optional[str] = None,
 ) -> "SweepResult":
     """Run every (spec × seed) cell; one compilation per structural group.
@@ -300,6 +357,16 @@ def run_sweep(
     sharded sweep is bit-identical to the unsharded one — the seed list is
     padded up to a multiple of the mesh size internally and the padding
     columns discarded.
+
+    ``client_devices`` (``control_plane="sharded"`` groups only) factors the
+    device count into a 2-D ``cells × clients`` mesh: each group runs with
+    its seed axis split over ``devices / client_devices`` mesh rows and its
+    client population split over ``client_devices`` columns
+    (:func:`sharding.cells_clients_mesh`). ``None`` auto-picks the largest
+    divisor of the device count that divides N (1 — a pure cells mesh — when
+    none fits or the group is replicated-discipline). The 2-D run is
+    differential-pinned against the 1-D and single-device paths: discrete
+    fields exact, continuous to ulps (``tests/test_control_sharded.py``).
 
     ``checkpoint_dir`` (opt-in resume for long grids): after each
     compilation group completes, the per-label histories land in a
@@ -363,12 +430,28 @@ def run_sweep(
             [sweep_point_from_config(specs[i][1]) for i in idxs])
         # elide the eq.-(10) noise draw only if the whole group is noise-free
         noise_free = all(specs[i][1].noise_std == 0 for i in idxs)
-        init_fn, runner = _build_runner(model, fl0, data, fl0.method,
-                                        noise_free, model_size, mesh=mesh)
-        states = init_fn(points, seeds_arr)  # leaves [S_group, R_pad, ...]
-        # final states are discarded; returning them is what lets XLA alias
-        # the donated inputs (see _build_runner)
-        _, hist = runner(points, states)  # hist leaves [S_group, R_pad, T, ..]
+        d_clients = 1
+        if n_dev > 1 and fl0.control_plane == "sharded":
+            d_clients = sharding.factor_client_devices(
+                fl0.num_clients, n_dev, client_devices)
+        if d_clients > 1:
+            # 2-D cells × clients mesh: seeds split over the rows, client
+            # rows over the columns. The global seed padding to n_dev is a
+            # multiple of the cells dimension (d_cells divides n_dev).
+            mesh2 = sharding.cells_clients_mesh(n_dev, d_clients)
+            runner = _build_sharded_group_runner(
+                model, fl0, data, fl0.method, mesh2, noise_free, model_size)
+            sharded_data = tuple(
+                sharding.shard_leading(jnp.asarray(d), mesh2,
+                                       mesh2.axis_names[1]) for d in data)
+            hist = runner(points, seeds_arr, *sharded_data)
+        else:
+            init_fn, runner = _build_runner(model, fl0, data, fl0.method,
+                                            noise_free, model_size, mesh=mesh)
+            states = init_fn(points, seeds_arr)  # leaves [S_group, R_pad, ..]
+            # final states are discarded; returning them is what lets XLA
+            # alias the donated inputs (see _build_runner)
+            _, hist = runner(points, states)  # leaves [S_group, R_pad, T, ..]
         for s, i in enumerate(idxs):
             # drop the seed-padding columns of a sharded run
             histories[i] = jax.tree.map(lambda x: x[s, :num_seeds], hist)
@@ -445,6 +528,15 @@ class SweepResult:
         subsampled eval cadence. Per-round quantities (scheduled counts,
         availability) are genuine every round and keep the plain tail
         window.
+
+        λ-derived statistics follow the same rule on the
+        ``record_lambda_every`` cadence (the same forward-fill/aliasing bug
+        class): when the dense/strided λ history is recorded, the window
+        ranges over the last ``window`` *recorded* rows — an E>1 summary
+        equals the E=1 summary subsampled onto the recording cadence
+        (test-pinned). At E=0 (no λ history) the columns fall back to the
+        always-on per-round summary leaves (max / entropy / effective
+        support size), whose tail window is genuine every round.
         """
         out = {}
         for lbl in self.labels:
@@ -459,6 +551,22 @@ class SweepResult:
             sched = np.asarray(h.num_scheduled)[:, -window:].mean(1)  # [R]
             avail = np.asarray(h.avail_count)[:, -window:].mean(1)    # [R]
             min_batt = float(np.asarray(h.min_battery)[:, -1].mean())
+            lam = np.asarray(h.lam) if not isinstance(h.lam, tuple) else None
+            if lam is not None and lam.size:
+                # window over the last `window` RECORDED rows ([R, T/E, N]) —
+                # never over forward-filled round indices
+                la = lam[:, -window:, :]
+                lam_max = la.max(-1).mean(1)                          # [R]
+                plogp = la * np.log(np.where(la > 0, la, 1.0))
+                lam_entropy = (-plogp.sum(-1)).mean(1)                # [R]
+                lam_ess = (1.0 / np.maximum(
+                    (la ** 2).sum(-1), np.finfo(la.dtype).tiny)).mean(1)
+            else:
+                # E=0: no λ history — the per-round summary leaves are the
+                # only λ record and their tail is genuine every round
+                lam_max = np.asarray(h.lam_max)[:, -window:].mean(1)
+                lam_entropy = np.asarray(h.lam_entropy)[:, -window:].mean(1)
+                lam_ess = np.asarray(h.lam_ess)[:, -window:].mean(1)
             out[lbl] = {
                 "avg_acc": float(avg.mean()),
                 "avg_acc_std": float(avg.std()),
@@ -472,6 +580,9 @@ class SweepResult:
                 "avail_count": float(avail.mean()),
                 # None (JSON null) for static scenarios, where it is +inf
                 "min_battery": min_batt if np.isfinite(min_batt) else None,
+                "lam_max": float(lam_max.mean()),
+                "lam_entropy": float(lam_entropy.mean()),
+                "lam_ess": float(lam_ess.mean()),
             }
         return out
 

@@ -31,6 +31,7 @@ from repro.configs.base import FLConfig
 from repro.core.channel import (draw_channels_scenario,
                                 draw_channels_scenario_ids, effective_channel,
                                 scenario_from_config)
+from repro.core import dro
 from repro.core.dro import lambda_ascent
 from repro.core.dynamics import (commit_process, init_chan_state,
                                  init_chan_state_ids, process_from_config,
@@ -55,6 +56,10 @@ class ServerState:
     energy_joules: float = 0.0
     history: List[Dict] = field(default_factory=list)
     chan_state: Any = ()  # ChanState for temporal scenarios, () otherwise
+    # strided λ snapshots on the FLConfig.record_lambda_every cadence
+    # (rounds t % E == 0; empty at E=0) — the production-tier mirror of the
+    # simulator's SimHistory.lam recorder
+    lam_snaps: List = field(default_factory=list)
 
 
 class ParameterServer:
@@ -406,7 +411,12 @@ class ParameterServer:
             fl.clients_per_round, ids=self._ids)
         if avail is not None:
             amask = amask * avail
-        lam = lambda_ascent(state.lam, metrics.client_losses, amask, fl.ascent_lr)
+        # sharded-discipline configs project via the same psum-bisection as
+        # the simulator's sharded round (local_rows), keeping the cross-tier
+        # λ contract intact; replicated configs keep the sort-based path
+        lam = lambda_ascent(state.lam, metrics.client_losses, amask,
+                            fl.ascent_lr, local_rows=self._ids is not None)
+        lam_max, lam_entropy, lam_ess = dro.lambda_summary(lam)
 
         row = {
             "round": state.round,
@@ -415,17 +425,27 @@ class ParameterServer:
             "num_scheduled": int(jnp.sum(mask)),
             "worst_client_loss": float(jnp.max(metrics.client_losses)),
             "grad_norm": float(metrics.grad_norm),
+            "lam_max": float(lam_max),
+            "lam_entropy": float(lam_entropy),
+            "lam_ess": float(lam_ess),
         }
         if self.process.temporal:
             row["avail_count"] = int(jnp.sum(eligible))
             row["min_battery"] = float(jnp.min(chan_state.battery))
         state.history.append(row)
+        e_rec = fl.record_lambda_every
+        if e_rec >= 1 and state.round % e_rec == 0:
+            # the simulator's strided recorder, mirrored host-side: full λ
+            # rows only every E rounds (never at E=0), O(T) summary stats in
+            # every history row above
+            state.lam_snaps.append(np.asarray(lam))
         return ServerState(
             params=params, opt_state=opt_state, lam=lam,
             round=state.round + 1,
             energy_joules=state.energy_joules + e_round,
             history=state.history,
             chan_state=chan_state,
+            lam_snaps=state.lam_snaps,
         )
 
     def run(self, state: ServerState, batches, rounds: int,

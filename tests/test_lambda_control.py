@@ -1,0 +1,248 @@
+"""ISSUE 8 λ-control suite: psum-bisection projection + strided λ history.
+
+Pinned here (single-device tier-1 lane; the mesh differentials live in
+``tests/test_control_sharded.py``):
+  - ``sharding.project_simplex_sharded`` (bisection on the water level θ)
+    equals the sort-based ``dro.project_simplex`` reference to <= 1e-6 rel
+    under ARBITRARY inputs — duplicates, huge magnitudes, -inf rows — and
+    always lands on the simplex (property suite, hypothesis/shim);
+  - the satellite bugfix: ``project_simplex`` accumulates its cumsum/θ at
+    f64 internally, so with x64 enabled a large-N near-tie vector matches
+    the straight-f64 oracle exactly (the f32 cumsum drift used to pick the
+    wrong support size ρ);
+  - ``FLConfig.record_lambda_every`` semantics: E=1 is today's dense [T, N]
+    history bit-for-bit, E>1 records exactly the t % E == 0 rows, E=0 drops
+    the leaf — and the always-on λ summary leaves (max / entropy /
+    effective support size) are identical across all cadences and match a
+    post-hoc recompute from the dense rows;
+  - ``SweepResult.summary`` windows λ stats over actual RECORDED rows: the
+    E=5 summary equals the E=1 summary computed on the subsampled cadence
+    (the forward-fill double-counting bug class PR 4 fixed for accuracy).
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.configs.base import FLConfig
+from repro.core import dro
+from repro.core.sharding import project_simplex_sharded
+from repro.core.simulator import run_simulation
+from repro.core.sweep import run_sweep
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+
+FINITE = st.floats(min_value=-50.0, max_value=50.0, allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# bisection == sort reference (property suite)
+# ---------------------------------------------------------------------------
+
+
+def _check_matches_sort(v):
+    v = jnp.asarray(v)
+    ref = np.asarray(dro.project_simplex(v))
+    bis = np.asarray(project_simplex_sharded(v))
+    assert np.all(bis >= 0.0)
+    np.testing.assert_allclose(bis.sum(), 1.0, atol=1e-5)
+    # <= 1e-6 relative on the simplex scale (entries are <= 1)
+    np.testing.assert_allclose(bis, ref, atol=2e-6)
+
+
+@pytest.mark.property
+@given(hnp.arrays(np.float32, (16,), elements=FINITE))
+@settings(max_examples=30, deadline=None)
+def test_bisection_matches_sort_property(v):
+    _check_matches_sort(v)
+
+
+@pytest.mark.property
+@given(st.integers(0, 10_000))
+def test_bisection_matches_sort_duplicates(seed):
+    # heavy quantization => many exact duplicates sitting at the water level
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 64))
+    v = np.round(rng.normal(size=n) * 2).astype(np.float32) / 2
+    _check_matches_sort(v)
+
+
+@pytest.mark.property
+@given(st.integers(0, 10_000))
+def test_bisection_neg_inf_rows(seed):
+    # -inf rows (unavailable clients) get exactly zero mass and the finite
+    # rows still form a simplex; the sort reference NaNs on -inf (inf - inf
+    # in its cumsum), so the bisection is pinned against the projection of
+    # the finite sub-vector instead
+    rng = np.random.default_rng(seed)
+    n_fin = int(rng.integers(1, 12))
+    n_inf = int(rng.integers(1, 12))
+    fin = rng.normal(size=n_fin).astype(np.float32)
+    v = np.concatenate([fin, np.full((n_inf,), -np.inf, np.float32)])
+    v = v[rng.permutation(n_fin + n_inf)]
+    out = np.asarray(project_simplex_sharded(jnp.asarray(v)))
+    assert np.all(out[np.isneginf(v)] == 0.0)
+    ref = np.asarray(dro.project_simplex(jnp.asarray(fin)))
+    np.testing.assert_allclose(np.sort(out[np.isfinite(v)]),
+                               np.sort(ref), atol=2e-6)
+
+
+def test_bisection_large_n_matches_f64_oracle():
+    # N=10^5 off-simplex ramp (the water level cuts mid-population): the
+    # regime the sort path's f32 cumsum used to drift in; the bisection's
+    # support-set polish must land on the f64 oracle's triangular profile
+    n = 100_000
+    v64 = np.full((n,), 1.0 / n) + 1e-9 * np.arange(n, dtype=np.float64)
+    out = np.asarray(project_simplex_sharded(jnp.asarray(v64, jnp.float32)))
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-4)
+    assert np.all(out >= 0.0)
+    # f64 oracle: support = top-m of the ramp, theta from the closed form
+    u = np.sort(v64)[::-1]
+    css = np.cumsum(u)
+    k = np.arange(1, n + 1)
+    rho = int(np.max(np.where(u + (1.0 - css) / k > 0, k, 0)))
+    theta = (css[rho - 1] - 1.0) / rho
+    np.testing.assert_allclose(out, np.maximum(v64 - theta, 0.0),
+                               atol=2e-8)
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: f64 internal accumulation of the sort-based projection
+# ---------------------------------------------------------------------------
+
+
+def test_project_simplex_f64_accumulation_matches_oracle():
+    """With x64 on, the f32-input projection must agree with a straight-f64
+    NumPy oracle on a large near-tie vector. Before the fix the f32 cumsum
+    drifted by ~N·ulp over N=10^5 entries near-uniform entries — enough to
+    flip the support predicate at the water level and pick a wrong ρ."""
+    n = 100_000
+    rng = np.random.default_rng(0)
+    # near-uniform with ties: worst case for the support-size predicate
+    v32 = (np.full((n,), 1.0 / n) +
+           rng.choice([0.0, 1e-8], size=n)).astype(np.float32)
+
+    def oracle(v):
+        u = np.sort(v.astype(np.float64))[::-1]
+        css = np.cumsum(u)
+        k = np.arange(1, n + 1, dtype=np.float64)
+        rho = np.max(np.where(u + (1.0 - css) / k > 0, k, 0.0))
+        theta = (np.sum(np.where(u + (1.0 - css) / k > 0, u, 0.0)) - 1) / rho
+        return np.maximum(v - theta, 0.0)
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        got = np.asarray(dro.project_simplex(jnp.asarray(v32)))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    np.testing.assert_allclose(got, oracle(v32).astype(np.float32),
+                               atol=np.float32(1.0 / n) * 1e-3)
+    np.testing.assert_allclose(got.sum(), 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# record_lambda_every semantics + summary windowing
+# ---------------------------------------------------------------------------
+
+_N, _DIM = 8, 32
+_MODEL = logistic_regression(dim=_DIM, num_classes=10)
+
+
+@pytest.fixture(scope="module")
+def lam_data():
+    x, y, xt, yt = make_fmnist_like(num_train=320, num_test=160, dim=_DIM,
+                                    seed=0)
+    return (*sorted_label_shards(x, y, _N), *sorted_label_shards(xt, yt, _N))
+
+
+def _fl(**kw):
+    return FLConfig(num_clients=_N, clients_per_round=3, rounds=10,
+                    batch_size=8, method="ca_afl", lr0=0.3, ascent_lr=2e-2,
+                    **kw)
+
+
+@pytest.mark.parametrize("control_plane", ["replicated", "sharded"])
+def test_record_lambda_every_semantics(lam_data, control_plane):
+    fl = _fl(control_plane=control_plane)
+    dense = run_simulation(_MODEL, fl, lam_data, seed=0)
+    assert np.asarray(dense.lam).shape == (10, _N)
+    strided = run_simulation(_MODEL, replace(fl, record_lambda_every=3),
+                             lam_data, seed=0)
+    # ceil(10/3) = 4 snapshots of rounds {0, 3, 6, 9}, equal to the dense
+    # rows on the same cadence (the recorder must not perturb the run)
+    assert np.asarray(strided.lam).shape == (4, _N)
+    np.testing.assert_array_equal(np.asarray(strided.lam),
+                                  np.asarray(dense.lam)[::3])
+    off = run_simulation(_MODEL, replace(fl, record_lambda_every=0),
+                         lam_data, seed=0)
+    assert off.lam == ()
+    # the O(T) summary leaves are always-on and cadence-independent
+    for f in ("lam_max", "lam_entropy", "lam_ess"):
+        np.testing.assert_array_equal(np.asarray(getattr(strided, f)),
+                                      np.asarray(getattr(dense, f)))
+        np.testing.assert_array_equal(np.asarray(getattr(off, f)),
+                                      np.asarray(getattr(dense, f)))
+
+
+def test_lambda_summary_leaves_match_posthoc(lam_data):
+    # the per-round summary leaves equal a recompute from the dense rows
+    hist = run_simulation(_MODEL, _fl(), lam_data, seed=0)
+    lam = np.asarray(hist.lam)                                   # [T, N]
+    np.testing.assert_allclose(np.asarray(hist.lam_max), lam.max(1),
+                               rtol=1e-6)
+    plogp = lam * np.log(np.where(lam > 0, lam, 1.0))
+    np.testing.assert_allclose(np.asarray(hist.lam_entropy),
+                               -plogp.sum(1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hist.lam_ess),
+                               1.0 / (lam ** 2).sum(1), rtol=1e-5)
+
+
+def test_record_lambda_every_rejects_negative():
+    from repro.core.simulator import init_sim_state
+    with pytest.raises(ValueError, match="record_lambda_every"):
+        init_sim_state(_MODEL, _fl(record_lambda_every=-1),
+                       jax.random.PRNGKey(0))
+
+
+def test_summary_windows_recorded_lambda_rows(lam_data):
+    """Satellite bugfix pin: the E=5 summary's λ columns equal the E=1
+    summary computed on the subsampled recording cadence — never a tail
+    window over round indices that don't exist in the strided history."""
+    specs = [("e1", _fl()), ("e5", _fl(record_lambda_every=5))]
+    res = run_sweep(_MODEL, lam_data, specs, seeds=(0, 1))
+    s = res.summary(window=2)
+    # recorded rows at E=5 over T=10: rounds {0, 5}; window=2 covers both
+    lam1 = np.asarray(res.history("e1").lam)[:, ::5, :]
+    lam5 = np.asarray(res.history("e5").lam)
+    np.testing.assert_array_equal(lam5, lam1)
+    la = lam5[:, -2:, :]
+    np.testing.assert_allclose(s["e5"]["lam_max"],
+                               la.max(-1).mean(1).mean(), rtol=1e-6)
+    plogp = la * np.log(np.where(la > 0, la, 1.0))
+    np.testing.assert_allclose(s["e5"]["lam_entropy"],
+                               (-plogp.sum(-1)).mean(1).mean(), rtol=1e-5)
+    # E=0 falls back to the per-round summary leaves, which are identical to
+    # the dense cell's leaves — so its columns equal e1's computed per-round
+    res0 = run_sweep(_MODEL, lam_data, [("e0", _fl(record_lambda_every=0))],
+                     seeds=(0, 1))
+    s0 = res0.summary(window=2)
+    h1 = res.history("e1")
+    np.testing.assert_allclose(
+        s0["e0"]["lam_max"],
+        np.asarray(h1.lam_max)[:, -2:].mean(1).mean(), rtol=1e-6)
+
+
+def test_sweep_groups_by_record_cadence(lam_data):
+    # record_lambda_every is STRUCTURAL: different cadences cannot share a
+    # compiled executable (different history pytrees), same cadences must
+    from repro.core import sweep as sweep_mod
+    specs = [("a", _fl()), ("b", _fl(record_lambda_every=2)),
+             ("c", replace(_fl(), lr0=0.2))]
+    sweep_mod.reset_trace_log()
+    run_sweep(_MODEL, lam_data, specs, seeds=(0,))
+    assert sweep_mod.trace_count() == 2  # {a, c} share; b compiles alone
