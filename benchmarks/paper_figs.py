@@ -83,7 +83,7 @@ def validate_claims(rows) -> dict:
     worst = {k: np.mean(v["worst_acc"][-10:]) for k, v in rows.items()}
     std = {k: np.mean(v["std_acc"][-10:]) for k, v in rows.items()}
     avg = {k: np.mean(v["avg_acc"][-10:]) for k, v in rows.items()}
-    checks = {
+    return {
         # Fig. 3 headline: CA-AFL(C=8) ~ 1/3 the energy of AFL
         "c8_energy_fraction_of_afl": e["ca_afl_c8"] / e["afl"],
         "claim_3x_energy_savings": bool(e["ca_afl_c8"] < 0.45 * e["afl"]),
@@ -102,7 +102,6 @@ def validate_claims(rows) -> dict:
         "claim_c_monotone_energy": bool(
             e["ca_afl_c8"] < e["ca_afl_c2"] < e["afl"]),
     }
-    return checks
 
 
 def main(full: bool = False):

@@ -207,6 +207,37 @@ def main():
         _write(payload)
         raise
 
+    # ---- contract-lint cell (ISSUE 9): the CI lint lane's exact command —
+    # both layers, AST rules + jaxpr program analyzers — timed end to end
+    # (subprocess, so its traces can't warm this process's jit caches). The
+    # per-layer seconds come from the linter's own JSON report; the wall
+    # ceiling is enforced with the other floors below so the lane stays
+    # cheap enough to run on every commit.
+    report = RESULTS / "lint-report.json"
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--jaxpr", "--json",
+         str(report)],
+        capture_output=True, text=True,
+        cwd=Path(__file__).resolve().parent.parent)
+    lint_wall = time.perf_counter() - t0
+    lint_report = json.loads(report.read_text())
+    payload["cells"]["lint"] = {
+        "wall_seconds": lint_wall,
+        "ast_seconds": lint_report["ast"]["seconds"],
+        "jaxpr_seconds": lint_report["jaxpr"]["seconds"],
+        "exit_code": proc.returncode,
+        "violations": len(lint_report["ast"]["violations"]),
+        "jaxpr_checks_failed": [c["name"] for c in
+                                lint_report["jaxpr"]["checks"]
+                                if not c["ok"]],
+    }
+    print(f"[perf_bench] contract lint: {lint_wall:.1f}s wall "
+          f"(AST {lint_report['ast']['seconds']:.1f}s, jaxpr "
+          f"{lint_report['jaxpr']['seconds']:.1f}s), "
+          f"exit {proc.returncode}")
+
     _write(payload)
     print(f"[perf_bench] wrote {RESULTS / 'BENCH_perf.json'} "
           f"(speedup_n100={payload['speedup_n100']:.2f}x)")
@@ -233,6 +264,17 @@ def main():
             f"sharded-sweep regression: devices=8 speedup "
             f"{shard['speedup_devices8']:.2f}x < 3x floor on "
             f"{shard['cpu_count']} cores")
+    lint = payload["cells"]["lint"]
+    if lint["exit_code"] != 0:
+        raise SystemExit(
+            f"contract lint failed (exit {lint['exit_code']}): "
+            f"{lint['violations']} violation(s), jaxpr checks failed: "
+            f"{lint['jaxpr_checks_failed']}\n{proc.stdout[-2000:]}")
+    if lint["wall_seconds"] > 60.0:
+        raise SystemExit(
+            f"contract-lint ceiling: {lint['wall_seconds']:.1f}s wall > 60s "
+            "— the jaxpr analyzer harness grew too expensive for a "
+            "per-commit lane")
     return payload
 
 

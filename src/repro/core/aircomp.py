@@ -67,7 +67,7 @@ def aircomp_aggregate_tree(trees, mask, key, noise_std: float = 0.0, k=None):
     leaves, treedef = jax.tree_util.tree_flatten(trees)
     keys = jax.random.split(key, len(leaves))
     out = []
-    for leaf, kk in zip(leaves, keys):
+    for leaf, kk in zip(leaves, keys, strict=True):
         out.append(aircomp_aggregate(leaf, mask, kk, noise_std, k))
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -103,7 +103,7 @@ def flat_awgn(key, leaves, dtype=jnp.float32) -> jnp.ndarray:
     return jnp.concatenate([
         jax.random.normal(kk, leaf.shape[1:], leaf.dtype)
         .reshape(-1).astype(dtype)
-        for leaf, kk in zip(leaves, keys)
+        for leaf, kk in zip(leaves, keys, strict=True)
     ])
 
 
@@ -168,7 +168,7 @@ def aircomp_psum_tree(trees_local, weights_local, key, noise_std=0.0, k=None,
     keys = jax.random.split(key, len(leaves))
     static_noise_free = isinstance(noise_std, (int, float)) and noise_std == 0
     out = []
-    for leaf, kk in zip(leaves, keys):
+    for leaf, kk in zip(leaves, keys, strict=True):
         mshape = (-1,) + (1,) * (leaf.ndim - 1)
         total = jax.lax.psum(
             jnp.sum(leaf * weights_local.reshape(mshape), axis=0), axis_name)

@@ -202,6 +202,7 @@ def evolve_availability(key, process: ChannelProcess,
     ``ids`` (control_plane="sharded"): per-client content-addressed uniforms
     instead of one full-[N] draw; ``avail`` then holds only those rows."""
     if ids is None:
+        # lint: allow(sharded-randomness): replicated-discipline branch — ids is None draws the full [N] chain in one stream
         u = jax.random.uniform(key, avail.shape)
     else:
         u = client_uniforms(key, ids)

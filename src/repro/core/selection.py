@@ -84,6 +84,7 @@ def gumbel_topk(key, logits: jnp.ndarray, k: int, ids=None):
 
     ``ids``: per-client content-addressed Gumbel streams instead of one
     full-array draw (control_plane="sharded")."""
+    # lint: allow(sharded-randomness): replicated-discipline branch — ids is None draws the full [N] Gumbel field in one stream
     g = jax.random.gumbel(key, logits.shape) if ids is None \
         else client_gumbel(key, ids)
     return _exact_k(logits + g, k)
@@ -106,7 +107,7 @@ def select_clients(
     k: int,
     C: float = 0.0,
     grad_norms: Optional[jnp.ndarray] = None,
-    gca: GCAParams = GCAParams(),
+    gca: Optional[GCAParams] = None,
     avail: Optional[jnp.ndarray] = None,
     ids=None,
 ) -> jnp.ndarray:
@@ -116,6 +117,9 @@ def select_clients(
     masked-out clients are never selected. When fewer than ``k`` clients are
     available, exact-K methods schedule only the available ones.
     """
+    if gca is None:
+        gca = GCAParams()
+
     def gate(mask):
         return mask if avail is None else mask * avail
 
@@ -192,19 +196,20 @@ def exact_k_scores(
     path materializes an O(N) array per device.
     """
     a_logits = availability_logits(avail)
+    if method == "greedy":
+        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel
+        # — deterministic, no Gumbel draw.
+        return h_eff + a_logits
     if method == "fedavg":
         logits = jnp.zeros(lam.shape) + a_logits
     elif method == "afl":
         logits = jnp.log(jnp.clip(lam, 1e-38)) + a_logits
     elif method == "ca_afl":
         logits = ca_afl_logits(lam, h_eff, C) + a_logits
-    elif method == "greedy":
-        # Prop. 2 limit: top-K lowest-energy == top-K best effective channel
-        # — deterministic, no Gumbel draw.
-        return h_eff + a_logits
     else:
         raise ValueError(
             f"sparse selection needs a static-K method, got {method!r}")
+    # lint: allow(sharded-randomness): replicated-discipline branch — ids is None draws the full [N] Gumbel field in one stream
     g = jax.random.gumbel(key, logits.shape) if ids is None \
         else client_gumbel(key, ids)
     return logits + g

@@ -263,7 +263,7 @@ def _build_runner(model, fl_static: FLConfig, data, method: str,
     return jax.jit(init_batched), jax.jit(batched, donate_argnums=(1,))
 
 
-def _build_sharded_group_runner(model, fl_static: FLConfig, data, method: str,
+def _build_sharded_group_runner(model, fl_static: FLConfig, method: str,
                                 mesh, noise_free: bool, model_size: int):
     """One jitted executable for a ``control_plane="sharded"`` group on the
     2-D ``cells × clients`` mesh (ISSUE 8): ``fn(points [S], seeds [R],
@@ -440,7 +440,7 @@ def run_sweep(
             # multiple of the cells dimension (d_cells divides n_dev).
             mesh2 = sharding.cells_clients_mesh(n_dev, d_clients)
             runner = _build_sharded_group_runner(
-                model, fl0, data, fl0.method, mesh2, noise_free, model_size)
+                model, fl0, fl0.method, mesh2, noise_free, model_size)
             sharded_data = tuple(
                 sharding.shard_leading(jnp.asarray(d), mesh2,
                                        mesh2.axis_names[1]) for d in data)
@@ -454,7 +454,7 @@ def run_sweep(
             _, hist = runner(points, states)  # leaves [S_group, R_pad, T, ..]
         for s, i in enumerate(idxs):
             # drop the seed-padding columns of a sharded run
-            histories[i] = jax.tree.map(lambda x: x[s, :num_seeds], hist)
+            histories[i] = jax.tree.map(lambda x, s=s: x[s, :num_seeds], hist)
             done[i] = 1.0
         if checkpoint_dir is not None:
             groups_done += 1

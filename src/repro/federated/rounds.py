@@ -66,6 +66,10 @@ def make_fl_round(model, optimizer, num_clients: int, clients_per_round: int,
     compute and HBM traffic. The simulator validates that training curves
     are indistinguishable (tests/test_perf_variants.py).
     """
+    if not 1 <= clients_per_round <= num_clients:
+        raise ValueError(
+            f"clients_per_round={clients_per_round} must be in "
+            f"[1, num_clients={num_clients}]")
     if gather_k:
         if microbatches != 1 or fused_probe:
             raise ValueError(
@@ -223,7 +227,7 @@ def add_awgn(grads, key, std: float):
         return g + std * jax.random.normal(k, g.shape, g.dtype)
 
     return jax.tree_util.tree_unflatten(
-        treedef, [noisy(g, k) for g, k in zip(leaves, keys)])
+        treedef, [noisy(g, k) for g, k in zip(leaves, keys, strict=True)])
 
 
 def _per_example_nll(model, params, batch, ctx):

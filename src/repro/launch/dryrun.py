@@ -193,7 +193,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, step_kind: str = "fl",
     return compiled, lowered, model, {"n_params": n_params, "shape": shape}
 
 
-def analyze(compiled, chips: int):
+def analyze(compiled):
     """Per-device cost from the compiled HLO text (while-trip-aware; see
     utils/hlo_cost.py) + XLA's own [loop-body-once] numbers as cross-check."""
     cost = compiled.cost_analysis()
@@ -230,7 +230,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     compiled, lowered, model, meta = lower_pair(
         arch, shape_name, mesh, step_kind=step_kind, microbatches=microbatches)
-    full = analyze(compiled, chips)
+    full = analyze(compiled)
     t_full = time.time() - t0
 
     result = {

@@ -1,0 +1,63 @@
+"""Contract linter: machine-enforce the repo's sharding/randomness/compilation
+contracts.
+
+Layer 1 (``repro.lint.rules``) is AST-level — sharded-randomness,
+gather-then-reduce, structural-field, single-source-literal — scoped by the
+declarative ``repro.lint.registry``. Layer 2 (``repro.lint.jaxpr_checks``)
+traces the actual compiled programs and asserts primitive-level invariants
+(collective census, donation, compile counts).
+
+CLI: ``python -m repro.lint`` (see ``--help``). Programmatic entry points:
+
+    from repro.lint import run_lint, iter_source_files
+    violations = run_lint()            # layer 1 over src/repro
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.lint.base import AllowReasonRule, Rule, SourceFile, Violation
+from repro.lint.rules import (GatherThenReduceRule, ShardedRandomnessRule,
+                              SingleSourceLiteralRule, StructuralFieldRule)
+
+__all__ = [
+    "Violation", "SourceFile", "Rule", "all_rules", "iter_source_files",
+    "run_lint", "default_root",
+]
+
+
+def default_root() -> Path:
+    """The ``src/repro`` package directory this linter ships inside."""
+    return Path(__file__).resolve().parents[1]
+
+
+def all_rules(root: Path) -> list[Rule]:
+    return [
+        ShardedRandomnessRule(),
+        GatherThenReduceRule(),
+        StructuralFieldRule(root),
+        SingleSourceLiteralRule(root),
+        AllowReasonRule(),
+    ]
+
+
+def iter_source_files(root: Path) -> list[SourceFile]:
+    out = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        out.append(SourceFile(path, rel))
+    return out
+
+
+def run_lint(root: Path | None = None,
+             rules: list[Rule] | None = None) -> list[Violation]:
+    """Run the layer-1 AST rules over ``root`` (default: this src/repro)."""
+    root = Path(root) if root is not None else default_root()
+    if rules is None:
+        rules = all_rules(root)
+    violations: list[Violation] = []
+    for src in iter_source_files(root):
+        for rule in rules:
+            violations.extend(rule.run(src))
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return violations

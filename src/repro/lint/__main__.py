@@ -1,0 +1,88 @@
+"""CLI for the contract linter.
+
+    python -m repro.lint                  # layer-1 AST rules over src/repro
+    python -m repro.lint --jaxpr          # + layer-2 jaxpr program analyzers
+    python -m repro.lint --jaxpr-only     # layer 2 alone (traces compile)
+    python -m repro.lint --json report.json   # machine-readable rule report
+
+Exit status is nonzero iff any violation (or failed jaxpr check) is found,
+so the CI lint lane can gate on it directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Contract linter: AST rules + jaxpr program analyzers.")
+    parser.add_argument(
+        "--root", type=Path, default=None,
+        help="package root to lint (default: the installed src/repro)")
+    parser.add_argument(
+        "--jaxpr", action="store_true",
+        help="also run the layer-2 jaxpr program analyzers (slower: traces)")
+    parser.add_argument(
+        "--jaxpr-only", action="store_true",
+        help="run only the jaxpr analyzers, skip the AST rules")
+    parser.add_argument(
+        "--json", type=Path, default=None, metavar="PATH",
+        help="write a JSON rule report to PATH")
+    args = parser.parse_args(argv)
+
+    from repro.lint import all_rules, default_root, run_lint
+
+    root = args.root if args.root is not None else default_root()
+    report: dict = {"root": str(root)}
+    exit_code = 0
+
+    if not args.jaxpr_only:
+        t0 = time.perf_counter()
+        rules = all_rules(root)
+        violations = run_lint(root, rules)
+        report["ast"] = {
+            "seconds": round(time.perf_counter() - t0, 3),
+            "rules": [{"name": r.name, "description": r.description}
+                      for r in rules],
+            "violations": [v.to_json() for v in violations],
+        }
+        for v in violations:
+            print(v.format())
+        if violations:
+            exit_code = 1
+        print(f"repro.lint: {len(violations)} violation(s) "
+              f"[{report['ast']['seconds']}s AST pass]")
+
+    if args.jaxpr or args.jaxpr_only:
+        from repro.lint import jaxpr_checks
+        t0 = time.perf_counter()
+        results = jaxpr_checks.run_all()
+        report["jaxpr"] = {
+            "seconds": round(time.perf_counter() - t0, 3),
+            "checks": [{"name": name, "ok": ok, "detail": detail}
+                       for name, ok, detail in results],
+        }
+        n_bad = 0
+        for name, ok, detail in results:
+            status = "ok" if ok else "FAIL"
+            print(f"jaxpr[{name}]: {status} — {detail}")
+            if not ok:
+                n_bad += 1
+        if n_bad:
+            exit_code = 1
+        print(f"repro.lint --jaxpr: {n_bad} failed check(s) "
+              f"[{report['jaxpr']['seconds']}s trace pass]")
+
+    if args.json is not None:
+        args.json.write_text(json.dumps(report, indent=2) + "\n")
+
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,153 @@
+"""Contract-linter core: violations, allow-comments, the Rule protocol.
+
+The linter machine-enforces the prose contracts the README/ROADMAP state —
+the per-client-id randomness discipline, the psum-of-local-rows rule, the
+``STATIC_FIELDS`` structural discipline and single-sourced constants — as
+AST rules over ``src/repro`` (layer 1; see ``repro.lint.rules``) plus
+jaxpr-level program analyzers (layer 2; ``repro.lint.jaxpr_checks``).
+
+Suppression is per line via an allow-comment **with a mandatory reason**::
+
+    h_f = all_gather_axis(h, axis_name)  # lint: allow(gather-then-reduce): GCA median needs [N]
+
+or, for multi-line statements, on the line directly above the flagged one::
+
+    # lint: allow(sharded-randomness): replicated-discipline branch (ids is None)
+    u = jax.random.uniform(key, avail.shape)
+
+A reasonless allow-comment is itself a violation (rule ``allow-reason``) —
+suppressions must say why, or they rot.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Optional
+
+ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\(\s*(?P<rules>[\w,\s-]+?)\s*\)\s*(?P<sep>:)?\s*(?P<reason>.*)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str       # repo-relative file path
+    line: int       # 1-indexed
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+class SourceFile:
+    """One parsed source file: AST + raw lines + allow-comment index."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        # line -> set of rule names allowed there (reasonless ones are
+        # recorded too — suppression still applies, but AllowReasonRule
+        # flags the comment itself, so the debt stays visible)
+        self.allows: dict[int, set[str]] = {}
+        self.reasonless: list[int] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = ALLOW_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+            self.allows.setdefault(i, set()).update(rules)
+            if not (m.group("sep") and m.group("reason").strip()):
+                self.reasonless.append(i)
+
+    def allowed(self, rule: str, line: int) -> bool:
+        """Is ``rule`` suppressed at ``line`` (same line or the line above)?"""
+        for ln in (line, line - 1):
+            if rule in self.allows.get(ln, ()):
+                return True
+        return False
+
+
+class Rule:
+    """Base class: subclasses set ``name`` and implement ``check``."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, src: SourceFile) -> Iterable[Violation]:
+        raise NotImplementedError
+
+    def run(self, src: SourceFile) -> list[Violation]:
+        """``check`` filtered through the file's allow-comments."""
+        return [v for v in self.check(src)
+                if not src.allowed(v.rule, v.line)]
+
+
+class AllowReasonRule(Rule):
+    """Every allow-comment must carry a reason after ``):``."""
+
+    name = "allow-reason"
+    description = ("`# lint: allow(<rule>)` needs `: <reason>` — "
+                   "suppressions must say why")
+
+    def check(self, src: SourceFile):
+        for ln in src.reasonless:
+            yield Violation(
+                rule=self.name, path=src.rel, line=ln,
+                message="allow-comment without a reason; write "
+                        "`# lint: allow(<rule>): <why this is legitimate>`")
+
+
+def call_name(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Call's func: ``jax.random.normal``, ``all_gather``…"""
+    if not isinstance(node, ast.Call):
+        return None
+    return dotted_name(node.func)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def iter_functions(tree: ast.Module):
+    """Yield every (possibly nested) function definition with its top-level
+    enclosing function name (nested defs inherit the outermost scope — the
+    sharded-path registry names top-level builders like
+    ``make_control_sharded_round_fn``, and their inner ``round_fn`` bodies
+    must inherit the discipline)."""
+    for top in ast.walk(tree):
+        if isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield top
+
+
+def enclosing_scopes(tree: ast.Module) -> dict[ast.AST, str]:
+    """Map every node to the name of its outermost enclosing function."""
+    scope: dict[ast.AST, str] = {}
+
+    def visit(node, current):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if current is None:
+                current = node.name
+        for child in ast.iter_child_nodes(node):
+            scope[child] = current
+            visit(child, current)
+
+    visit(tree, None)
+    return scope

@@ -1,0 +1,144 @@
+"""Declarative scoping for the contract rules.
+
+The rules in ``repro.lint.rules`` are generic AST walks; everything
+repo-specific — which functions live on the sharded control path, which
+names denote shard-local sizes, which constants are single-sourced — is
+declared here. Adding a new sharded-path function or a new single-source
+constant is one entry in this file (plus, for a constant, its owner
+definition).
+"""
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# Sharded-control-path functions, by repo-relative module path. Inside these
+# (including their nested defs), the sharded-randomness and gather-then-reduce
+# rules apply: per-client randomness must be content-addressed by global id
+# (channel.client_* / fold_in streams), and no O(n_local) value may be
+# all_gather'd / sorted / reduced-after-gather — psum-of-local-rows is the
+# only allowed reduction shape.
+# ---------------------------------------------------------------------------
+
+SHARDED_PATH_FUNCTIONS: dict[str, frozenset[str]] = {
+    "core/simulator.py": frozenset({
+        "make_control_sharded_round_fn", "_batch_indices_ids",
+    }),
+    "core/sharding.py": frozenset({
+        "hierarchical_top_k", "distributed_top_k", "project_simplex_sharded",
+        "assemble_rows", "assemble_batch_rows", "global_client_ids",
+        "control_sharded_cell_run",
+    }),
+    "core/channel.py": frozenset({
+        "client_keys", "client_normals", "client_uniforms",
+        "compose_channel_ids", "rayleigh_mag_ids",
+        "draw_channels_scenario_ids",
+    }),
+    "core/dynamics.py": frozenset({
+        "init_chan_state_ids", "evolve_fading_ids", "evolve_availability",
+    }),
+    "core/selection.py": frozenset({
+        "client_gumbel", "gumbel_topk", "exact_k_scores",
+    }),
+    "core/dro.py": frozenset({
+        "lambda_ascent", "lambda_summary",
+    }),
+    "core/transport.py": frozenset({
+        "_client_uniforms", "quantized_aggregate_psum_tree",
+    }),
+}
+
+# Functions whose entire purpose is a K-bounded gather — exempt from the
+# bare-all_gather arm of the gather-then-reduce rule (their operands are
+# [kk <= K] candidate vectors, not O(n_local) rows; the jaxpr analyzer
+# additionally proves the bound on the traced program).
+GATHER_EXEMPT_FUNCTIONS: frozenset[tuple[str, str]] = frozenset({
+    ("core/sharding.py", "hierarchical_top_k"),
+})
+
+# Names that denote shard-local row counts. A jax.random draw whose shape
+# derives from one of these inside a sharded-path function is materializing
+# O(n_local) randomness NOT content-addressed by client id.
+LOCAL_SIZE_NAMES: frozenset[str] = frozenset({
+    "n_local", "n_rows", "n_locals", "shard_rows",
+})
+
+# Array names whose ``.shape`` is shard-local inside sharded-path functions.
+LOCAL_ARRAY_NAMES: frozenset[str] = frozenset({
+    "ids", "avail", "lam", "v_local", "scores_local", "logits",
+    "values_local", "shards_local",
+})
+
+# jax.random draw endpoints the sharded-randomness rule watches. ``fold_in``
+# is deliberately absent — it IS the content-addressing mechanism.
+RANDOM_DRAW_CALLS: frozenset[str] = frozenset({
+    "jax.random.normal", "jax.random.uniform", "jax.random.gumbel",
+    "jax.random.split", "jax.random.randint", "jax.random.bernoulli",
+    "random.normal", "random.uniform", "random.gumbel", "random.split",
+    "random.randint", "random.bernoulli",
+})
+
+# Gather/sort endpoints of the gather-then-reduce rule.
+GATHER_CALLS: frozenset[str] = frozenset({
+    "all_gather_axis", "sharding.all_gather_axis", "jax.lax.all_gather",
+    "lax.all_gather",
+})
+SORT_CALLS: frozenset[str] = frozenset({
+    "jnp.sort", "jax.numpy.sort", "jax.lax.sort", "lax.sort", "sorted",
+    "jnp.argsort", "jax.numpy.argsort", "jnp.median", "jax.numpy.median",
+})
+REDUCE_CALLS: frozenset[str] = frozenset({
+    "jnp.sum", "jnp.mean", "jnp.max", "jnp.min", "jnp.median", "jnp.std",
+    "jnp.var", "jnp.cumsum", "jnp.prod", "jnp.any", "jnp.all",
+    "jax.lax.psum", "lax.psum", "jax.lax.pmax", "lax.pmax", "jax.lax.pmin",
+    "lax.pmin",
+})
+
+# ---------------------------------------------------------------------------
+# Jitted-code builders: functions that construct (or are) traced round/sweep
+# programs. An FLConfig attribute read inside Python-level control flow here
+# is a STRUCTURAL read — it must be listed in sweep.STATIC_FIELDS, or cells
+# differing in it would silently share one compiled program.
+# ---------------------------------------------------------------------------
+
+JIT_BUILDER_FUNCTIONS: dict[str, frozenset[str]] = {
+    "core/simulator.py": frozenset({
+        "make_param_round_fn", "make_control_sharded_round_fn",
+        "_record_lambda", "init_sim_state", "run_simulation",
+    }),
+    "core/sweep.py": frozenset({
+        "_build_runner", "_build_sharded_group_runner",
+    }),
+    "core/sharding.py": frozenset({
+        "run_simulation_sharded", "build_control_sharded_runner",
+        "control_sharded_cell_run", "control_sharded_history_specs",
+    }),
+    "core/transport.py": frozenset({
+        "transport_from_config",
+    }),
+}
+
+# Names an FLConfig rides under in those functions.
+FLCONFIG_NAMES: frozenset[str] = frozenset({"fl", "fl0", "fl_static"})
+
+# Where STATIC_FIELDS and the FLConfig dataclass live (repo-relative, for
+# the structural-field rule's cross-checks).
+STATIC_FIELDS_MODULE = "core/sweep.py"
+FLCONFIG_MODULE = "configs/base.py"
+
+# ---------------------------------------------------------------------------
+# Single-source constants: the declarative generalization of the PR 6
+# tokenize hack. Each entry pins a numeric literal to exactly ONE defining
+# assignment; any other occurrence of the literal inside ``scope`` (a glob
+# relative to src/repro) is a violation unless allow-commented. Comments and
+# docstrings citing the value are prose, not code, and never match (the scan
+# is over NUMBER tokens).
+# ---------------------------------------------------------------------------
+
+SINGLE_SOURCE_LITERALS: tuple[dict, ...] = (
+    {
+        "name": "truncation-floor",
+        "value": 0.05,
+        "owner_module": "core/energy.py",
+        "owner_name": "TRUNCATION_FLOOR",
+        "scope": "core/*.py",
+    },
+)

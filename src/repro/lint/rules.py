@@ -1,0 +1,365 @@
+"""Layer-1 AST rules: the source-level contract checks.
+
+Four rules, scoped by ``repro.lint.registry``:
+
+  - ``sharded-randomness`` — inside sharded-control-path functions, a
+    ``jax.random.*`` draw whose shape derives from a shard-local size must
+    instead route through the id-addressed ``channel.client_*`` helpers
+    (fold_in streams), or sharded and unsharded programs silently diverge.
+  - ``gather-then-reduce`` — in the same functions, ``all_gather``/sort (or
+    any reduction over a gathered/sorted value) materializes O(n_local·D)
+    state; psum-of-local-rows is the only allowed reduction shape.
+  - ``structural-field`` — an FLConfig field read in Python-level control
+    flow inside a jitted-code builder is structural and must appear in
+    ``sweep.STATIC_FIELDS`` (and every STATIC_FIELDS entry must be a real
+    FLConfig field), or sweep cells differing in it share one executable.
+  - ``single-source-literal`` — registered paper constants
+    (``registry.SINGLE_SOURCE_LITERALS``) have exactly one defining literal.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import tokenize
+from pathlib import Path
+
+from repro.lint import registry
+from repro.lint.base import (Rule, SourceFile, Violation, call_name,
+                             enclosing_scopes)
+
+# ---------------------------------------------------------------------------
+# sharded-randomness
+# ---------------------------------------------------------------------------
+
+# jax.random draw -> (positional index, keyword) of its shape-like argument
+_SHAPE_ARG = {
+    "normal": (1, "shape"), "uniform": (1, "shape"), "gumbel": (1, "shape"),
+    "randint": (1, "shape"), "bernoulli": (2, "shape"), "split": (1, "num"),
+}
+
+
+def _shape_expr(call: ast.Call):
+    tail = (call_name(call) or "").rsplit(".", 1)[-1]
+    pos, kw = _SHAPE_ARG.get(tail, (1, "shape"))
+    for k in call.keywords:
+        if k.arg == kw:
+            return k.value
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def _derives_from_local(expr: ast.AST) -> str | None:
+    """Name of the shard-local size this expression derives from, if any."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in registry.LOCAL_SIZE_NAMES:
+            return node.id
+        if (isinstance(node, ast.Attribute) and node.attr == "shape"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in registry.LOCAL_ARRAY_NAMES):
+            return f"{node.value.id}.shape"
+    return None
+
+
+class ShardedRandomnessRule(Rule):
+    name = "sharded-randomness"
+    description = ("sharded-path jax.random draws at shard-local shapes must "
+                   "be content-addressed via channel.client_* fold_in streams")
+
+    def check(self, src: SourceFile):
+        funcs = registry.SHARDED_PATH_FUNCTIONS.get(src.rel)
+        if not funcs:
+            return
+        scopes = enclosing_scopes(src.tree)
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if scopes.get(node) not in funcs:
+                continue
+            cname = call_name(node)
+            if cname not in registry.RANDOM_DRAW_CALLS:
+                continue
+            shape = _shape_expr(node)
+            local = _derives_from_local(shape) if shape is not None else None
+            if local is None:
+                continue
+            yield Violation(
+                rule=self.name, path=src.rel, line=node.lineno,
+                message=f"{cname} draws at shard-local shape ({local}) in "
+                        f"sharded-path function {scopes[node]!r}; route "
+                        "per-client randomness through the id-addressed "
+                        "channel.client_* helpers (fold_in streams) so "
+                        "sharded and unsharded programs agree per client")
+
+
+# ---------------------------------------------------------------------------
+# gather-then-reduce
+# ---------------------------------------------------------------------------
+
+
+class GatherThenReduceRule(Rule):
+    name = "gather-then-reduce"
+    description = ("no all_gather/sort (or reduction over a gathered value) "
+                   "on the sharded control path — psum-of-local-rows is the "
+                   "only allowed reduction shape")
+
+    def check(self, src: SourceFile):
+        funcs = registry.SHARDED_PATH_FUNCTIONS.get(src.rel)
+        if not funcs:
+            return
+        scopes = enclosing_scopes(src.tree)
+        # names assigned (anywhere in a watched scope) from a gather/sort call
+        tainted: dict[str, set[str]] = {}
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Assign) or scopes.get(node) not in funcs:
+                continue
+            src_calls = {call_name(c) for c in ast.walk(node.value)
+                         if isinstance(c, ast.Call)}
+            hits = src_calls & (registry.GATHER_CALLS | registry.SORT_CALLS)
+            if not hits:
+                continue
+            for tgt in node.targets:
+                for t in ast.walk(tgt):
+                    if isinstance(t, ast.Name):
+                        tainted.setdefault(t.id, set()).update(
+                            h for h in hits if h)
+
+        seen: set[tuple[int, str]] = set()
+
+        def emit(line, message):
+            if (line, message) not in seen:
+                seen.add((line, message))
+                return [Violation(rule=self.name, path=src.rel, line=line,
+                                  message=message)]
+            return []
+
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            scope = scopes.get(node)
+            if scope not in funcs:
+                continue
+            cname = call_name(node)
+            if cname in registry.SORT_CALLS:
+                yield from emit(
+                    node.lineno,
+                    f"{cname} in sharded-path function {scope!r}: sorting "
+                    "couples all rows — use the psum-bisection / top_k "
+                    "formulation instead")
+            if (cname in registry.GATHER_CALLS
+                    and (src.rel, scope) not in
+                    registry.GATHER_EXEMPT_FUNCTIONS):
+                yield from emit(
+                    node.lineno,
+                    f"{cname} in sharded-path function {scope!r} "
+                    "materializes O(n_local*D) rows; assemble K-bounded "
+                    "slots (ownership-psum) or reduce locally then psum")
+            if cname in registry.REDUCE_CALLS:
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    for sub in ast.walk(arg):
+                        inner = call_name(sub) if isinstance(sub, ast.Call) \
+                            else None
+                        if inner in registry.GATHER_CALLS \
+                                or inner in registry.SORT_CALLS:
+                            yield from emit(
+                                node.lineno,
+                                f"{cname} reduces a {inner} result in "
+                                f"{scope!r}: gather-then-reduce — compute "
+                                "the local partial reduction and psum it")
+                        if (isinstance(sub, ast.Name)
+                                and sub.id in tainted):
+                            via = ", ".join(sorted(tainted[sub.id]))
+                            yield from emit(
+                                node.lineno,
+                                f"{cname}({sub.id}) reduces a value "
+                                f"gathered/sorted via {via} in {scope!r}: "
+                                "gather-then-reduce — compute the local "
+                                "partial reduction and psum it")
+
+
+# ---------------------------------------------------------------------------
+# structural-field
+# ---------------------------------------------------------------------------
+
+
+def load_static_fields(root: Path) -> tuple[tuple[str, ...], int]:
+    """(STATIC_FIELDS entries, definition line) parsed from sweep.py's AST."""
+    tree = ast.parse((root / registry.STATIC_FIELDS_MODULE).read_text())
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if any(isinstance(t, ast.Name) and t.id == "STATIC_FIELDS"
+               for t in targets):
+            return tuple(ast.literal_eval(value)), node.lineno
+    raise LookupError(
+        f"STATIC_FIELDS not found in {registry.STATIC_FIELDS_MODULE}")
+
+
+def load_flconfig_fields(root: Path) -> frozenset[str]:
+    """Field names of the FLConfig dataclass, parsed from its AST."""
+    tree = ast.parse((root / registry.FLCONFIG_MODULE).read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "FLConfig":
+            return frozenset(
+                stmt.target.id for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name))
+    raise LookupError(f"FLConfig not found in {registry.FLCONFIG_MODULE}")
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — argument-presence dispatch, not a
+    config-field read; exempt from the structural-field rule."""
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            and any(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators))
+
+
+class StructuralFieldRule(Rule):
+    name = "structural-field"
+    description = ("FLConfig fields read in Python control flow inside "
+                   "jitted-code builders must be in sweep.STATIC_FIELDS "
+                   "(and STATIC_FIELDS entries must be real FLConfig fields)")
+
+    def __init__(self, root: Path):
+        self.root = root
+        self.static_fields, self.static_line = load_static_fields(root)
+        self.fl_fields = load_flconfig_fields(root)
+
+    def check(self, src: SourceFile):
+        # converse direction: every STATIC_FIELDS entry is a real field
+        if src.rel == registry.STATIC_FIELDS_MODULE:
+            for f in self.static_fields:
+                if f not in self.fl_fields:
+                    yield Violation(
+                        rule=self.name, path=src.rel, line=self.static_line,
+                        message=f"STATIC_FIELDS entry {f!r} is not an "
+                                "FLConfig field — stale entries make "
+                                "_static_signature silently vacuous")
+        funcs = registry.JIT_BUILDER_FUNCTIONS.get(src.rel)
+        if not funcs:
+            return
+        scopes = enclosing_scopes(src.tree)
+
+        def fl_fields_in(expr) -> set[str]:
+            out = set()
+            for n in ast.walk(expr):
+                if (isinstance(n, ast.Attribute)
+                        and isinstance(n.value, ast.Name)
+                        and n.value.id in registry.FLCONFIG_NAMES):
+                    out.add(n.attr)
+            return out
+
+        # alias map per enclosing scope: name -> FLConfig fields its value
+        # derives from (e.g. ``scheme = fl.transport``, ``noise_free =
+        # fl.noise_std == 0``)
+        aliases: dict[tuple[str, str], set[str]] = {}
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Assign) or scopes.get(node) not in funcs:
+                continue
+            fields = fl_fields_in(node.value)
+            if not fields:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    aliases.setdefault(
+                        (scopes[node], tgt.id), set()).update(fields)
+
+        def walk_test(expr, scope):
+            """Fields (direct or via alias) a branch decision reads."""
+            found: set[str] = set()
+            skip: set[int] = set()
+            for n in ast.walk(expr):
+                if id(n) in skip:
+                    continue
+                if _is_none_check(n):
+                    skip.update(id(c) for c in ast.walk(n))
+                    continue
+                if (isinstance(n, ast.Attribute)
+                        and isinstance(n.value, ast.Name)
+                        and n.value.id in registry.FLCONFIG_NAMES):
+                    found.add(n.attr)
+                elif isinstance(n, ast.Name):
+                    found.update(aliases.get((scope, n.id), ()))
+            return found
+
+        for node in ast.walk(src.tree):
+            scope = scopes.get(node)
+            if scope not in funcs:
+                continue
+            if isinstance(node, (ast.If, ast.IfExp, ast.While)):
+                test = node.test
+            else:
+                continue
+            for field in sorted(walk_test(test, scope)):
+                if field in self.static_fields:
+                    continue
+                if field not in self.fl_fields:
+                    continue  # attribute of some non-config object
+                yield Violation(
+                    rule=self.name, path=src.rel, line=test.lineno,
+                    message=f"FLConfig.{field} decides a Python-level branch "
+                            f"in jitted-code builder {scope!r} but is not in "
+                            "sweep.STATIC_FIELDS — sweep cells differing in "
+                            "it would share one compiled program")
+
+
+# ---------------------------------------------------------------------------
+# single-source-literal
+# ---------------------------------------------------------------------------
+
+
+def _owner_line(root: Path, module: str, name: str) -> int:
+    tree = ast.parse((root / module).read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name
+                for t in node.targets):
+            return node.lineno
+    raise LookupError(f"{name} not defined in {module}")
+
+
+class SingleSourceLiteralRule(Rule):
+    name = "single-source-literal"
+    description = ("registered paper constants have exactly ONE defining "
+                   "literal (registry.SINGLE_SOURCE_LITERALS)")
+
+    def __init__(self, root: Path):
+        self.root = root
+        self.owners = {
+            spec["name"]: (spec, _owner_line(root, spec["owner_module"],
+                                             spec["owner_name"]))
+            for spec in registry.SINGLE_SOURCE_LITERALS
+        }
+
+    def check(self, src: SourceFile):
+        for cname, (spec, owner_line) in self.owners.items():
+            scope_files = {p.resolve()
+                           for p in self.root.glob(spec["scope"])}
+            if src.path.resolve() not in scope_files:
+                continue
+            toks = tokenize.generate_tokens(io.StringIO(src.text).readline)
+            for tok in toks:
+                if tok.type != tokenize.NUMBER:
+                    continue
+                try:
+                    if float(tok.string) != spec["value"]:
+                        continue
+                except ValueError:
+                    continue
+                is_owner = (src.rel == spec["owner_module"]
+                            and tok.start[0] == owner_line)
+                if is_owner:
+                    continue
+                yield Violation(
+                    rule=self.name, path=src.rel, line=tok.start[0],
+                    message=f"literal {spec['value']!r} duplicates the "
+                            f"single-source constant {spec['owner_name']} "
+                            f"({spec['owner_module']}:{owner_line}); import "
+                            "it instead — a drifted copy silently "
+                            "desynchronizes the paper constant "
+                            f"[{cname}]")

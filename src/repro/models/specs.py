@@ -39,7 +39,7 @@ class ShardingCtx:
             self.data_size = 1
         else:
             self.axes = MeshAxes.for_mesh(mesh)
-            shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            shape = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
             self.model_size = shape.get("model", 1)
             d = shape.get("data", 1)
             if "pod" in shape:

@@ -1,0 +1,7 @@
+"""Lint fixture FLConfig: the fields the fixture sweep.py may reference."""
+
+
+class FLConfig:
+    num_clients: int = 4
+    eval_every: int = 1
+    record_lambda_every: int = 1

@@ -1,0 +1,4 @@
+"""Known-bad lint fixture: a drifted copy of the truncation floor."""
+
+# BAD: duplicates core/energy.py's TRUNCATION_FLOOR literal
+FLOOR_COPY = 0.05

@@ -1,0 +1,6 @@
+"""Known-bad lint fixture: a reasonless allow-comment."""
+
+
+def evolve_availability(avail):
+    # lint: allow(gather-then-reduce)
+    return avail

@@ -1,0 +1,3 @@
+"""Lint fixture: the single-source owner of TRUNCATION_FLOOR."""
+
+TRUNCATION_FLOOR = 0.05

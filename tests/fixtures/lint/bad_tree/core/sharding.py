@@ -1,0 +1,20 @@
+"""Known-bad lint fixture: sorts on the sharded path; the exempt gather."""
+import jax.numpy as jnp
+
+from repro.core.sharding import all_gather_axis
+
+
+def project_simplex_sharded(v_local):
+    # BAD: sort in a sharded-path function
+    u = jnp.sort(v_local)
+    return u[::-1]
+
+
+def control_sharded_cell_run(scores_local):
+    # BAD: sort in a sharded-path function
+    return jnp.argsort(scores_local)
+
+
+def hierarchical_top_k(v, axis_name):
+    # NOT flagged: registry.GATHER_EXEMPT_FUNCTIONS — K-bounded by design
+    return all_gather_axis(v, axis_name)

@@ -1,0 +1,28 @@
+"""Known-bad lint fixture: sharded-randomness + gather-then-reduce.
+
+Never imported — parsed by ``repro.lint`` self-tests. The function names
+deliberately collide with the real registry entries so the rules scope in.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import all_gather_axis
+
+
+def make_control_sharded_round_fn(key, n_local, axis_name):
+    def round_fn(v_local):
+        # BAD: local-shaped draw, not content-addressed by client id
+        noise = jax.random.normal(key, (n_local,))
+        # BAD: gather-then-reduce via a tainted name
+        accs = all_gather_axis(v_local, axis_name)
+        mean = jnp.mean(accs)
+        # BAD: gather-then-reduce, nested call form
+        nested = jnp.mean(all_gather_axis(v_local, axis_name))
+        return noise, mean, nested
+
+    return round_fn
+
+
+def _batch_indices_ids(key, ids):
+    # lint: allow(sharded-randomness): fixture — a reasoned suppression must hold
+    return jax.random.uniform(key, ids.shape)

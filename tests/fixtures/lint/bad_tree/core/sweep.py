@@ -1,0 +1,19 @@
+"""Known-bad lint fixture: structural-field violations, both directions."""
+
+# BAD: "not_a_real_field" is not an FLConfig field (converse check)
+STATIC_FIELDS = ("num_clients", "not_a_real_field")
+
+
+def _build_runner(fl):
+    # BAD: eval_every read in control flow but missing from STATIC_FIELDS
+    if fl.eval_every == 1:
+        return 1
+    return 2
+
+
+def _build_sharded_group_runner(fl):
+    # BAD via alias: cadence derives from fl.record_lambda_every
+    cadence = fl.record_lambda_every
+    while cadence > 0:
+        cadence -= 1
+    return cadence

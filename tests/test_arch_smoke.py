@@ -55,7 +55,7 @@ def test_train_step_smoke(arch, key):
     moved = any(
         bool(jnp.any(a != b_))
         for a, b_ in zip(jax.tree_util.tree_leaves(p2),
-                         jax.tree_util.tree_leaves(params)))
+                         jax.tree_util.tree_leaves(params), strict=True))
     assert moved
 
 

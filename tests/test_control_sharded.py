@@ -98,6 +98,23 @@ def test_sharded_discipline_runs(cs_data, method):
         np.testing.assert_array_equal(np.asarray(h.num_scheduled), 5.0)
 
 
+@pytest.mark.parametrize("eval_every", [1, 2])
+def test_eval_stats_psum_form_matches_unsharded(cs_data, eval_every):
+    """ISSUE 9 regression: the sharded round's test-eval statistics are
+    psum-of-local-rows (mean/min via psum/pmin, std via the two-pass
+    centered variance) instead of the old all_gather + jnp.{mean,min,std} —
+    the one remaining O(N) gather on the exact-K path. A size-1 clients
+    mesh runs the psum-form program in the tier-1 lane; it must agree with
+    the unsharded stack-form reference to summation-order ulps, on both the
+    per-round and the cond-gated (eval_every > 1) eval programs."""
+    fl = replace(_fl("ca_afl"), eval_every=eval_every)
+    mesh = sharding.client_mesh(1)
+    ref = run_simulation(MODEL, fl, cs_data, seed=0)
+    sh = sharding.run_simulation_control_sharded(MODEL, fl, cs_data, mesh,
+                                                 seed=0)
+    _assert_agrees(ref, sh)
+
+
 def test_sharded_discipline_deterministic(cs_data):
     h1 = run_simulation(MODEL, _fl(), cs_data, seed=3)
     h2 = run_simulation(MODEL, _fl(), cs_data, seed=3)
@@ -165,7 +182,8 @@ def test_sharded_discipline_cross_tier():
         np.testing.assert_allclose(np.asarray(srv.lam),
                                    np.asarray(new_state.lam), atol=1e-6)
         for a, b in zip(jax.tree_util.tree_leaves(srv.params),
-                        jax.tree_util.tree_leaves(new_state.w)):
+                        jax.tree_util.tree_leaves(new_state.w),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-5, atol=1e-6)
 

@@ -81,7 +81,7 @@ def test_server_step_matches_simulator_round(tier_data, method):
     np.testing.assert_allclose(np.asarray(srv.lam), np.asarray(new_state.lam),
                                atol=1e-6)
     for a, b in zip(jax.tree_util.tree_leaves(srv.params),
-                    jax.tree_util.tree_leaves(new_state.w)):
+                    jax.tree_util.tree_leaves(new_state.w), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
 
@@ -106,7 +106,7 @@ def test_server_step_matches_simulator_round_temporal(tier_data):
     # init_state mirrors init_sim_state's key discipline: same outer key =>
     # same initial ChanState (and same zeros-init logreg params)
     srv = ps.init_state(jax.random.PRNGKey(0))
-    for a, b in zip(srv.chan_state, state.chan_state):
+    for a, b in zip(srv.chan_state, state.chan_state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
                       opt_state=sgd(fl.lr0).init(state.w),
@@ -163,7 +163,7 @@ def test_server_step_matches_simulator_round_transports(tier_data, transport,
     np.testing.assert_allclose(np.asarray(srv.lam), np.asarray(new_state.lam),
                                atol=1e-6)
     for a, b in zip(jax.tree_util.tree_leaves(srv.params),
-                    jax.tree_util.tree_leaves(new_state.w)):
+                    jax.tree_util.tree_leaves(new_state.w), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
 
@@ -294,5 +294,5 @@ def test_battery_exhaustion_stops_spending_on_server(tier_data):
     assert all(h["avail_count"] == 0 for h in state.history)
     # the PS received nothing over the air: the global model must not move
     for a, b in zip(jax.tree_util.tree_leaves(p0),
-                    jax.tree_util.tree_leaves(state.params)):
+                    jax.tree_util.tree_leaves(state.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -149,9 +149,10 @@ def test_param_specs_match_params(arch):
         specs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_p) == len(flat_s)
     sizes = {"data": 16, "model": 16}
-    for leaf, spec in zip(flat_p, flat_s):
+    for leaf, spec in zip(flat_p, flat_s, strict=True):
         assert len(spec) <= leaf.ndim, (leaf.shape, spec)
-        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim,
+                           strict=False):
             if ax is None:
                 continue
             axes = ax if isinstance(ax, tuple) else (ax,)

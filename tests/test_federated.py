@@ -51,7 +51,7 @@ def test_selection_mask_gates_gradient(small_model, key):
     batch2["tokens"] = batch["tokens"].at[4:].set(0)  # clients 2,3 rows
     p_b, _, _ = rnd(params, opt.init(params), batch2, mask_a, key)
     for a, b in zip(jax.tree_util.tree_leaves(p_a),
-                    jax.tree_util.tree_leaves(p_b)):
+                    jax.tree_util.tree_leaves(p_b), strict=True):
         np.testing.assert_allclose(a, b, atol=1e-7)
 
 
@@ -67,7 +67,7 @@ def test_microbatch_equivalence(small_model, key):
     np.testing.assert_allclose(m1.loss, m4.loss, rtol=1e-5)
     np.testing.assert_allclose(m1.client_losses, m4.client_losses, rtol=1e-4)
     for a, b in zip(jax.tree_util.tree_leaves(p1),
-                    jax.tree_util.tree_leaves(p4)):
+                    jax.tree_util.tree_leaves(p4), strict=True):
         np.testing.assert_allclose(a, b, rtol=5e-3, atol=2e-3)
 
 

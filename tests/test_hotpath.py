@@ -243,7 +243,7 @@ def test_gca_round_reuses_probe_gradients(hot_data):
     expect = jax.tree.map(
         lambda leaf: jnp.einsum("n...,n->...", leaf, mask) / k_sched, stepped)
     for a, b in zip(jax.tree_util.tree_leaves(expect),
-                    jax.tree_util.tree_leaves(new_state.w)):
+                    jax.tree_util.tree_leaves(new_state.w), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
 
@@ -291,7 +291,7 @@ def test_server_gca_probe_reuse_matches_dense_round(hot_data):
     np.testing.assert_allclose(a.history[-1]["loss"], b.history[-1]["loss"],
                                rtol=1e-5)
     for pa, pb in zip(jax.tree_util.tree_leaves(a.params),
-                      jax.tree_util.tree_leaves(b.params)):
+                      jax.tree_util.tree_leaves(b.params), strict=True):
         np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
                                    rtol=1e-5, atol=1e-6)
 

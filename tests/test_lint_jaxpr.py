@@ -1,0 +1,118 @@
+"""ISSUE 9 layer-2 tests: jaxpr program analyzers across methods ×
+transports × control planes.
+
+The analyzers trace the REAL compiled programs (``jax.make_jaxpr`` on a
+size-1 clients mesh — collectives appear in the jaxpr regardless of mesh
+size) and these tests pin the invariants the prose contracts promise:
+
+  - every exact-K sharded round is sort-free with K-bounded all_gather
+    operands and a pinned psum census, under all three transports and with
+    the temporal (ChannelProcess) program too;
+  - GCA keeps its documented dense exception but its census is pinned;
+  - the REPLICATED control plane's round (both an exact-K and the GCA
+    program) DOES sort — the negative control proving the census sees what
+    it claims to see;
+  - ``project_simplex_sharded`` spends exactly 1 psum per bisection
+    iteration plus pmax + 2 polish psums;
+  - the sweep runner's donation aliasing and one-compile-per-structural-
+    group accounting hold.
+"""
+import jax
+import pytest
+
+from repro.lint import jaxpr_checks as jc
+
+EXACT_K = jc.EXACT_K_METHODS
+TRANSPORTS = jc.TRANSPORTS
+
+
+# ---------------------------------------------------------------------------
+# Sharded control plane: methods × transports
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("method", EXACT_K)
+def test_sharded_round_sort_free_and_k_bounded(method, transport):
+    closed = jc.trace_sharded_round(method, transport)
+    census = jc.primitive_census(closed)
+    assert census["sort"] == 0, (
+        f"{method}/{transport}: sort primitive on the sharded path")
+    sizes = jc.all_gather_operand_sizes(closed)
+    assert sizes, "expected the hierarchical top-k candidate gathers"
+    assert max(sizes) <= jc.K, (
+        f"{method}/{transport}: all_gather operand sizes {sizes} exceed the "
+        f"K={jc.K} candidate bound — an O(n_local) row block is gathered")
+    assert census["psum"] == jc.PINNED_PSUMS[(method, transport)]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_sharded_gca_census_pinned(transport):
+    census = jc.primitive_census(jc.trace_sharded_round("gca", transport))
+    assert census["psum"] == jc.PINNED_PSUMS[("gca", transport)]
+
+
+def test_sharded_round_temporal_program_still_clean():
+    # the ChannelProcess carry is a different structural program; the
+    # collective discipline must survive it
+    closed = jc.trace_sharded_round("ca_afl", "analog", temporal=True)
+    census = jc.primitive_census(closed)
+    assert census["sort"] == 0
+    assert max(jc.all_gather_operand_sizes(closed)) <= jc.K
+
+
+def test_exact_k_psum_census_transport_invariant():
+    # exact-K aggregation rides the same psum-tree shape under every
+    # transport — pinned as a single shared budget
+    budgets = {jc.PINNED_PSUMS[(m, t)] for m in EXACT_K for t in TRANSPORTS}
+    assert len(budgets) == 1
+
+
+# ---------------------------------------------------------------------------
+# Replicated control plane: the negative control
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_replicated_round_sorts(transport):
+    census = jc.primitive_census(
+        jc.trace_replicated_round("ca_afl", transport))
+    assert census["sort"] >= 1, (
+        "replicated round shows no sort — the analyzer is blind")
+
+
+def test_replicated_gca_round_traces():
+    census = jc.primitive_census(jc.trace_replicated_round("gca"))
+    assert census["sort"] >= 1  # GCA median + the sort-based projection
+
+
+# ---------------------------------------------------------------------------
+# Projection budget, donation, compile accounting
+# ---------------------------------------------------------------------------
+
+
+def test_projection_psum_budget():
+    ok, detail = jc.check_projection_psum_budget()
+    assert ok, detail
+
+
+def test_sweep_donation_aliasing():
+    ok, detail = jc.check_sweep_donation()
+    assert ok, detail
+
+
+def test_compile_count_one_per_structural_group():
+    ok, detail = jc.check_compile_count()
+    assert ok, detail
+
+
+def test_run_all_green():
+    results = jc.run_all()
+    assert [name for name, ok, _ in results if not ok] == [], results
+
+
+def test_harness_mesh_is_single_device():
+    # the whole suite must stay runnable in the tier-1 single-device lane
+    _, _, _, mesh = jc._setup()
+    assert mesh.size == 1
+    assert jax.device_count() >= 1

@@ -39,7 +39,7 @@ def test_fused_probe_round_runs_and_matches_descent(key):
     # the DESCENT update is identical (same weighted grads)
     np.testing.assert_allclose(m1.loss, m2.loss, rtol=1e-5)
     for a, b in zip(jax.tree_util.tree_leaves(p1),
-                    jax.tree_util.tree_leaves(p2)):
+                    jax.tree_util.tree_leaves(p2), strict=True):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
     # probe losses differ by exactly one optimizer step (w^t vs w^{t+1});
     # both are finite and the stale ones are the PRE-update losses (higher
@@ -111,7 +111,7 @@ def test_slstm_custom_vjp_matches_autodiff(key):
 
     g1 = jax.grad(loss_c, argnums=(0, 1, 2))(gx, r, bg)
     g2 = jax.grad(loss_r, argnums=(0, 1, 2))(gx, r, bg)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
 
 
@@ -127,5 +127,5 @@ def test_slstm_pallas_kernel_matches_ref(key):
     hs_p, st_p = slstm_pallas(gx, r, b, z, z, z, m0, tb=16, interpret=True)
     hs_r, st_r = slstm_ref(gx, r, b, z, z, z, m0)
     np.testing.assert_allclose(hs_p, hs_r, rtol=2e-4, atol=2e-4)
-    for a, b_ in zip(st_p, st_r):
+    for a, b_ in zip(st_p, st_r, strict=True):
         np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)

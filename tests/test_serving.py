@@ -58,5 +58,5 @@ def test_grow_cache_noop_for_state_models(key):
     cache = model.init_cache(2, 8)
     grown = model.grow_cache(cache, 8, 100)
     for a, b in zip(jax.tree_util.tree_leaves(cache),
-                    jax.tree_util.tree_leaves(grown)):
+                    jax.tree_util.tree_leaves(grown), strict=True):
         assert a.shape == b.shape

@@ -248,12 +248,13 @@ def test_server_sharded_batch_matches_unsharded(shard_data):
         state = ps.init_state(jax.random.PRNGKey(0))
         state = ps.run(state, batches(), rounds=3, log_fn=None)
         out[name] = state
-    for a, b in zip(out["plain"].history, out["sharded"].history):
+    for a, b in zip(out["plain"].history, out["sharded"].history,
+                    strict=True):
         assert a["num_scheduled"] == b["num_scheduled"]
         np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-5)
         np.testing.assert_allclose(a["energy_j"], b["energy_j"], rtol=1e-6)
     pa = jax.tree_util.tree_leaves(out["plain"].params)
     pb = jax.tree_util.tree_leaves(out["sharded"].params)
-    for la, lb in zip(pa, pb):
+    for la, lb in zip(pa, pb, strict=True):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
                                    rtol=2e-5, atol=2e-6)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import lint
 from repro.configs.base import FLConfig
 from repro.core import energy, sharding, transport
 from repro.core.simulator import init_sim_state, make_param_round_fn
@@ -122,21 +123,36 @@ def test_pad_to_multiple_pads_cyclically():
 
 
 def test_truncation_floor_literal_defined_once():
-    """The NUMBER token 0.05 appears exactly once in src/repro/core — the
-    TRUNCATION_FLOOR definition in energy.py. transport.py used to repeat it
-    as three keyword defaults (comments/docstrings citing the paper's value
-    are prose, not a second source of truth, and don't count)."""
-    import io
-    import tokenize
+    """The §IV-A truncation floor has exactly ONE defining literal —
+    machine-enforced by ``repro.lint``'s single-source-literal rule (ISSUE 9
+    migrated the hand-rolled tokenize walk that used to live here onto the
+    declarative ``registry.SINGLE_SOURCE_LITERALS``). transport.py used to
+    repeat the 0.05 as three keyword defaults; comments/docstrings citing
+    the value are prose, not a second source of truth, and don't count."""
+    from repro.lint.rules import SingleSourceLiteralRule
 
-    hits = []
-    for path in sorted((SRC / "core").glob("*.py")):
-        toks = tokenize.generate_tokens(
-            io.StringIO(path.read_text()).readline)
-        for tok in toks:
-            if tok.type == tokenize.NUMBER and float(tok.string) == 0.05:
-                hits.append(f"{path.name}:{tok.start[0]}")
-    assert hits == ["energy.py:25"], hits
+    rule = SingleSourceLiteralRule(SRC)
+    violations = [v for src in lint.iter_source_files(SRC)
+                  for v in rule.run(src)]
+    assert violations == [], [v.format() for v in violations]
+
+
+def test_truncation_floor_rule_fires_on_seeded_duplicate(tmp_path):
+    """The migrated rule still has teeth: a drifted copy of the 0.05 literal
+    anywhere in core/ is flagged at its exact site."""
+    from repro.lint.rules import SingleSourceLiteralRule
+
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "energy.py").write_text("TRUNCATION_FLOOR = 0.05\n")
+    (core / "transport.py").write_text(
+        "def digital_rate(h, floor=0.05):\n    return h - floor\n")
+    rule = SingleSourceLiteralRule(tmp_path)
+    violations = [v for src in lint.iter_source_files(tmp_path)
+                  for v in rule.run(src)]
+    assert [(v.path, v.line, v.rule) for v in violations] == \
+        [("core/transport.py", 1, "single-source-literal")]
+    assert "TRUNCATION_FLOOR" in violations[0].message
 
 
 def test_transport_digital_defaults_are_truncation_floor():

@@ -96,6 +96,6 @@ def test_increasing_c_reduces_energy(sim_data):
         h = run_simulation(MODEL, _fl("ca_afl", energy_C=c), sim_data)
         energies.append(float(h.energy[-1]))
     # monotone non-increasing (allow small stochastic wiggle)
-    for lo, hi in zip(energies[1:], energies[:-1]):
+    for lo, hi in zip(energies[1:], energies[:-1], strict=True):
         assert lo < hi * 1.10
     assert energies[-1] < energies[0] * 0.7
