@@ -76,9 +76,14 @@ def bench_cell(model, fl, data, dense: bool):
     compile_s = time.perf_counter() - t0
 
     jax.block_until_ready(compiled(point, state))  # warm-up execution
-    t0 = time.perf_counter()
-    jax.block_until_ready(compiled(point, state))
-    exec_s = time.perf_counter() - t0
+    # best-of-3: the cells feed ratio floors (quantized/sparse vs analog),
+    # and a single timing window on a shared CI runner jitters +-10% — the
+    # minimum is the least-contended estimate of the program's true cost
+    exec_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(point, state))
+        exec_s = min(exec_s, time.perf_counter() - t0)
 
     try:
         ma = compiled.memory_analysis()
@@ -140,28 +145,27 @@ def main():
     payload["speedup_n100"] = payload["cells"]["n100"]["speedup_hot_path"]
 
     # ---- per-transport round throughput (N=100 hot path): the fused
-    # quantize-aggregate pass must not tax the round — acceptance floor is
-    # quantized >= 0.8x analog rounds/sec; digital is recorded for the
-    # energy-accounting trajectory (its aggregation is the noise-free mean)
+    # quantize-aggregate and compress-aggregate passes must not tax the
+    # round — acceptance floors are quantized AND sparse >= 0.8x analog
+    # rounds/sec; digital is recorded for the energy-accounting trajectory
+    # (its aggregation is the noise-free mean)
     data = _data(100)
     fl = FLConfig(num_clients=100, clients_per_round=K, rounds=40,
                   batch_size=50, method="ca_afl")
     tcells = {}
-    for tr in ("analog", "quantized", "digital"):
+    for tr in ("analog", "quantized", "digital", "sparse"):
         row = bench_cell(model, replace(fl, transport=tr), data, dense=False)
         tcells[tr] = row
         print(f"[perf_bench] transport {tr:10s} "
               f"{row['rounds_per_second']:8.2f} rounds/s  "
               f"compile {row['compile_seconds']:.2f}s")
-    tcells["quantized_vs_analog"] = (
-        tcells["quantized"]["rounds_per_second"]
-        / tcells["analog"]["rounds_per_second"])
-    tcells["digital_vs_analog"] = (
-        tcells["digital"]["rounds_per_second"]
-        / tcells["analog"]["rounds_per_second"])
+    for tr in ("quantized", "digital", "sparse"):
+        tcells[f"{tr}_vs_analog"] = (tcells[tr]["rounds_per_second"]
+                                     / tcells["analog"]["rounds_per_second"])
     payload["cells"]["transports_n100"] = tcells
     print(f"[perf_bench] quantized transport at "
-          f"{tcells['quantized_vs_analog']:.2f}x analog throughput")
+          f"{tcells['quantized_vs_analog']:.2f}x, sparse at "
+          f"{tcells['sparse_vs_analog']:.2f}x analog throughput")
 
     # ---- sharded-sweep scale-out cell (subprocess: needs its own 8-device
     # host platform, which must not leak into the cells above) -------------
@@ -258,6 +262,12 @@ def main():
             f"quantized-transport regression: {q_ratio:.2f}x analog round "
             "throughput < 0.8x acceptance floor (fused quantize-aggregate "
             "pass is taxing the round)")
+    s_ratio = payload["cells"]["transports_n100"]["sparse_vs_analog"]
+    if s_ratio < 0.8:
+        raise SystemExit(
+            f"sparse-transport regression: {s_ratio:.2f}x analog round "
+            "throughput < 0.8x acceptance floor (top-k compress + "
+            "error-feedback carry is taxing the round)")
     shard = payload["cells"]["sharded_sweep"]
     if (shard["cpu_count"] or 0) >= 8 and shard["speedup_devices8"] < 3.0:
         raise SystemExit(

@@ -4,16 +4,23 @@ The paper's central trade-off is energy efficiency (eq. 3-6 ledger) against
 distributional robustness (worst-client accuracy) — and its headline 3×+
 savings claim is against *transmission-scheme* baselines. This example
 sweeps the CA-AFL energy-conservation factor C (plus the AFL and FedAvg
-endpoints) across ALL THREE uplink transports (``repro.core.transport``):
+endpoints) across ALL FOUR uplink transports (``repro.core.transport``):
 
   - ``analog``    — the paper's channel-inversion AirComp (eq. 10);
   - ``quantized`` — b-bit stochastic-rounding AirComp (cheaper airtime,
                     added quantization error);
   - ``digital``   — orthogonal OFDMA (clean decode, rate/latency energy
                     bill — the comparison point the savings are measured
-                    against).
+                    against);
+  - ``sparse``    — top-k compressed AirComp with per-client error-feedback
+                    memory (cheapest airtime; the dropped mass is deferred,
+                    not lost).
 
-Everything runs in ONE ``run_sweep`` call: the transport scheme is
+The ledger prices BOTH directions: ``dl_rx_power`` is nonzero here, so every
+round's model broadcast bills each receiver per-scheme downlink airtime
+(full f32 for analog/digital, compressed for quantized/sparse) on top of the
+uplink — the ``energy`` column is the total and ``dl_energy`` its broadcast
+share. Everything runs in ONE ``run_sweep`` call: the transport scheme is
 structural (one compilation per method × scheme), every scheme knob is
 traced, and the analog cells compile to exactly the pre-transport program.
 On the noise-free default scenario the digital round computes the identical
@@ -37,7 +44,7 @@ from repro.federated.partition import sorted_label_shards
 from repro.models.logreg import logistic_regression
 
 C_GRID = (0.0, 2.0, 8.0, 32.0)
-TRANSPORTS = ("analog", "quantized", "digital")
+TRANSPORTS = ("analog", "quantized", "digital", "sparse")
 
 
 def main():
@@ -47,7 +54,8 @@ def main():
     data = (xs, ys, xts, yts)
     model = logistic_regression(64, 10)
     fl = FLConfig(num_clients=24, clients_per_round=10, rounds=100,
-                  batch_size=24, lr0=0.3, lr_decay=0.995, ascent_lr=2e-2)
+                  batch_size=24, lr0=0.3, lr_decay=0.995, ascent_lr=2e-2,
+                  dl_rx_power=5e-5)  # price the broadcast: downlink ON
 
     variants = {}
     for tr in TRANSPORTS:
@@ -100,6 +108,18 @@ def main():
     # the front stretches across transports.
     assert len({lbl.split(":")[0] for lbl in fronts["noisy"]}) >= 2, \
         "expected the noisy-uplink front to span multiple transports"
+
+    # the broadcast is priced in every cell: dl_energy is a strictly
+    # positive share of the total, and the compressed schemes' share is
+    # cheaper than the full-f32 broadcast the analog/digital cells pay
+    for lbl in result.labels:
+        row = summary[lbl]
+        assert 0.0 < row["dl_energy"] < row["energy"], lbl
+    for m in ["ca_afl_C8", "afl", "fedavg"]:
+        assert (summary[f"sparse:{m}"]["dl_energy"]
+                < summary[f"analog:{m}"]["dl_energy"]), m
+        assert (summary[f"quantized:{m}"]["dl_energy"]
+                < summary[f"analog:{m}"]["dl_energy"]), m
 
     # matched-accuracy transmission-scheme comparison: on the noise-free
     # default scenario the digital round computes the IDENTICAL update to

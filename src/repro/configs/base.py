@@ -160,11 +160,19 @@ class FLConfig:
     # sweep compilation-group signature; the knobs below it are traced
     # (sweepable) TransportParams data. "analog" compiles to exactly the
     # pre-transport program.
-    transport: str = "analog"       # analog | quantized | digital
+    transport: str = "analog"       # analog | quantized | digital | sparse
     quant_bits: float = 8.0         # payload precision (bits per parameter)
     tx_power: float = 0.1           # digital uplink transmit power P (W)
     ofdma_bandwidth: float = 1e5    # digital per-client OFDMA subband B (Hz)
     rx_noise: float = 1e-2          # digital receiver noise+interference (W)
+    # sparse (error-feedback top-k) transport. `sparse_density` is STRUCTURAL:
+    # it bakes the static per-row coordinate count k = max(1, round(d·P)) into
+    # the compiled top-k, so it joins STATIC_FIELDS like `transport` itself.
+    sparse_density: float = 0.05    # kept fraction of coordinates per upload
+    # downlink broadcast receive power (W) — prices the per-round global-model
+    # broadcast in transport.downlink_energy. Traced knob; the default 0.0
+    # keeps every pre-downlink ledger/battery trajectory bit-for-bit (x−0=x).
+    dl_rx_power: float = 0.0
     # temporal scenario dynamics (repro.core.dynamics). `temporal` is
     # STRUCTURAL: it switches the simulator/server onto the stateful
     # ChannelProcess path and joins the sweep compilation-group signature;

@@ -56,7 +56,7 @@ from repro.configs.base import FLConfig
 from repro.core.channel import (client_normals, client_uniforms,
                                 compose_channel, compose_channel_ids,
                                 effective_channel)
-from repro.core.transport import uplink_energy
+from repro.core.transport import downlink_energy, uplink_energy
 
 
 @dataclass(frozen=True)
@@ -217,27 +217,43 @@ class ProcessStep(NamedTuple):
     h: jnp.ndarray         # [N] effective channel (eq. 6)
     e_need: jnp.ndarray    # [N] eqs. (3-6) upload cost at this channel
     avail: jnp.ndarray     # [N] availability after the Markov step
-    eligible: jnp.ndarray  # [N] avail ∧ can-afford: the schedulable pool
+    eligible: jnp.ndarray  # [N] recv ∧ can-afford-both: the schedulable pool
     fast: jnp.ndarray      # fading state to carry forward
     log_shadow: jnp.ndarray
+    # downlink side (transport.downlink_energy): e_dl is the scalar
+    # per-receiver broadcast cost this round, recv the [N] 0/1 mask of
+    # clients that actually listen (available ∧ can afford the receive).
+    # Both are exact zeros / equal to `avail` when dl_power = 0, keeping
+    # the pre-downlink programs' values bit-for-bit.
+    e_dl: jnp.ndarray = jnp.float32(0.0)
+    recv: jnp.ndarray = jnp.float32(1.0)
 
 
 def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
                  num_clients: int, num_subcarriers: int, model_size: int,
-                 scheme: str = "analog", tp=None, ids=None) -> ProcessStep:
-    """Evolve fading + availability and price this round's uploads.
+                 scheme: str = "analog", tp=None, ids=None,
+                 dl_num_tx: int = 1) -> ProcessStep:
+    """Evolve fading + availability and price this round's uploads + the
+    broadcast receive.
 
     The SINGLE implementation of the per-round process tick — the simulator's
     scan body and ``ParameterServer.step`` both call it, so the two tiers
     cannot drift in key streams or gating order. Selection happens between
-    this and :func:`commit_process` (which depletes the transmitters'
-    batteries into the next carry).
+    this and :func:`commit_process` (which depletes the transmitters' — and
+    receivers' — batteries into the next carry).
 
     ``scheme``/``tp`` (``repro.core.transport``): uploads are priced under
     the configured uplink transport, so battery gating sees the scheme's
     actual cost — quantized clients afford more rounds at low ``bits``,
     digital clients pay the OFDMA rate/latency bill. The analog default is
-    eqs. (3-6) verbatim.
+    eqs. (3-6) verbatim. The downlink broadcast is priced too
+    (``transport.downlink_energy``, ``dl_num_tx`` = the scheduled-set size
+    bounding a sparse broadcast's support): a client RECEIVES iff it is
+    available and can afford the listen, and is SCHEDULABLE iff it received
+    and can additionally afford the upload — so batteries still never go
+    negative. At the default ``dl_power = 0`` the receive is free,
+    ``recv == avail`` and every gate/depletion value is bit-for-bit the
+    pre-downlink program's (x + 0 = x, x − 0 = x).
 
     ``ids`` (control_plane="sharded"): ``state`` holds only these clients'
     rows and every draw is content-addressed by global id — the SAME stream
@@ -254,14 +270,24 @@ def step_process(k_chan, scenario, process: ChannelProcess, state: ChanState,
     avail = evolve_availability(jax.random.fold_in(k_chan, 3), process,
                                 state.avail, ids=ids)
     e_need = uplink_energy(scheme, tp, h, model_size, scenario)
-    eligible = avail * (state.battery >= e_need).astype(jnp.float32)
+    # tp=None is the bare-analog calling convention of older tests/tools:
+    # analog pricing never reads the knobs, and a knob-less call gets the
+    # free (pre-downlink) broadcast
+    e_dl = (jnp.float32(0.0) if tp is None else
+            downlink_energy(scheme, tp, model_size, scenario,
+                            num_tx=dl_num_tx))
+    recv = avail * (state.battery >= e_dl).astype(jnp.float32)
+    eligible = recv * (state.battery >= e_need + e_dl).astype(jnp.float32)
     return ProcessStep(h=h, e_need=e_need, avail=avail, eligible=eligible,
-                       fast=fast, log_shadow=log_shadow)
+                       fast=fast, log_shadow=log_shadow, e_dl=e_dl,
+                       recv=recv)
 
 
 def commit_process(step: ProcessStep, state: ChanState,
                    mask: jnp.ndarray) -> ChanState:
-    """Post-selection: deplete the transmitting clients' batteries."""
+    """Post-selection: deplete the transmitters' (upload) and receivers'
+    (broadcast listen) batteries."""
     return ChanState(fast=step.fast, log_shadow=step.log_shadow,
                      avail=step.avail,
-                     battery=state.battery - mask * step.e_need)
+                     battery=(state.battery - mask * step.e_need
+                              - step.recv * step.e_dl))

@@ -666,7 +666,7 @@ def control_sharded_history_specs(fl, axis: str, lead: Sequence = ()):
     return SimHistory(
         avg_acc=rep, worst_acc=rep, std_acc=rep, energy=rep, loss=rep,
         num_scheduled=rep, lam=lam, avail_count=rep, min_battery=rep,
-        lam_max=rep, lam_entropy=rep, lam_ess=rep)
+        lam_max=rep, lam_entropy=rep, lam_ess=rep, dl_energy=rep)
 
 
 def pad_to_multiple(values: Sequence[int], multiple: int) -> list[int]:

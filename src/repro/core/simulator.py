@@ -73,7 +73,9 @@ from repro.core.sharding import (all_gather_axis, assemble_batch_rows,
                                  local_slice, project_simplex_sharded)
 from repro.core import transport as transport_mod
 from repro.core.transport import (TRANSPORTS, quantized_aggregate_psum_tree,
-                                  quantized_aggregate_stack_tree)
+                                  quantized_aggregate_stack_tree,
+                                  sparse_aggregate_psum_tree,
+                                  sparse_aggregate_stack_tree, sparse_k_coords)
 from repro.models.logreg import SimModel
 from repro.utils.tree import tree_size
 
@@ -97,6 +99,15 @@ class SimState(NamedTuple):
     # final buffer as SimHistory.lam); the leaf-less () at E in {0, 1}, so
     # the dense-recording program is carried unchanged.
     lam_snaps: Any = ()
+    # [n_rows, P] per-client error-feedback residual memory of the sparse
+    # transport (transport="sparse" only; the leaf-less () otherwise, so the
+    # analog/quantized/digital programs are carried unchanged). Rows are
+    # indexed by client id — LOCAL rows under population sharding, per the
+    # ChanState new-carry-leaf rule (core/dynamics.py).
+    ef_resid: Any = ()
+    # scalar cumulative downlink Joules (the broadcast share of `energy`);
+    # exactly zero at the default dl_rx_power = 0
+    dl_energy: Any = ()
 
 
 class SimHistory(NamedTuple):
@@ -118,6 +129,10 @@ class SimHistory(NamedTuple):
     lam_max: jnp.ndarray      # [T]
     lam_entropy: jnp.ndarray  # [T]
     lam_ess: jnp.ndarray      # [T]
+    # [T] cumulative downlink Joules — the broadcast share of `energy`
+    # (which is now uplink + downlink). Additive column: exactly zero at the
+    # default dl_rx_power = 0, so pre-downlink trajectories are untouched.
+    dl_energy: jnp.ndarray = jnp.float32(0.0)
 
 
 def _record_lambda(fl: FLConfig, state: SimState, lam_new, t):
@@ -290,32 +305,49 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
         return wc
 
     temporal = fl.temporal
+    # sparse transport: the kept-coordinate count is STATIC (it bakes the
+    # compiled top-k width — fl.sparse_density joins STATIC_FIELDS)
+    k_coords = (sparse_k_coords(fl.sparse_density, model_size)
+                if scheme == "sparse" else None)
 
     def aggregate_full(tpt, w_prev, w_stack, mask, mask_l, k_noise,
-                       noise_std, k_denom):
+                       noise_std, k_denom, ef_resid):
         """Transport-dispatched eq. (10) over a full [n(_local), model]
-        update stack (the dense/GCA and population-sharded paths). Analog
-        compiles to exactly the pre-transport per-leaf/psum calls; digital
-        statically drops the AWGN (orthogonal decode); quantized aggregates
-        stochastically-rounded per-client deltas, with global client ids
-        addressing the rounding streams so sharded rows quantize identically
-        to dense ones."""
+        update stack (the dense/GCA and population-sharded paths); returns
+        ``(w_new, ef_resid')``. Analog compiles to exactly the
+        pre-transport per-leaf/psum calls; digital statically drops the
+        AWGN (orthogonal decode); quantized aggregates stochastically-
+        rounded per-client deltas, with global client ids addressing the
+        rounding streams so sharded rows quantize identically to dense
+        ones; sparse top-k-compresses delta + residual per client and
+        carries the dropped mass forward (``ef_resid`` rows are LOCAL under
+        population sharding — each device updates only its own clients'
+        memory). Non-sparse schemes pass the (leaf-less) residual through
+        untouched."""
         if scheme == "quantized":
             if pop:
                 ids = (jax.lax.axis_index(axis_name) * n_local
                        + jnp.arange(n_local))
                 return quantized_aggregate_psum_tree(
                     w_prev, w_stack, mask_l, ids, k_noise, noise_std,
-                    tpt.bits, k_denom, axis_name)
+                    tpt.bits, k_denom, axis_name), ef_resid
             return quantized_aggregate_stack_tree(
                 w_prev, w_stack, mask, jnp.arange(n), k_noise, noise_std,
-                tpt.bits, k_denom)
+                tpt.bits, k_denom), ef_resid
+        if scheme == "sparse":
+            if pop:
+                return sparse_aggregate_psum_tree(
+                    w_prev, w_stack, mask_l, k_noise, noise_std, k_coords,
+                    k_denom, ef_resid, axis_name)
+            return sparse_aggregate_stack_tree(
+                w_prev, w_stack, mask, k_noise, noise_std, k_coords,
+                k_denom, ef_resid)
         eff_noise = 0.0 if scheme == "digital" else noise_std
         if pop:
             return aircomp_psum_tree(w_stack, mask_l, k_noise, eff_noise,
-                                     k_denom, axis_name)
+                                     k_denom, axis_name), ef_resid
         return aircomp_aggregate_tree(w_stack, mask, k_noise, eff_noise,
-                                      k_denom)
+                                      k_denom), ef_resid
 
     def sample_batches(key):
         """One batch per client — local rows [n_local, B, ...] under
@@ -346,7 +378,8 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             cs = state.chan_state
             pstep = step_process(k_chan, scen, proc, cs, n,
                                  fl.num_subcarriers, model_size,
-                                 scheme=scheme, tp=point.transport)
+                                 scheme=scheme, tp=point.transport,
+                                 dl_num_tx=fl.clients_per_round)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
         else:
             h = effective_channel(
@@ -417,8 +450,9 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                                    in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
             else:
                 w_stack = w1
-            w_new = aggregate_full(point.transport, state.w, w_stack, mask,
-                                   mask_l, k_noise, noise_std, k_denom)
+            w_new, ef_new = aggregate_full(point.transport, state.w, w_stack,
+                                           mask, mask_l, k_noise, noise_std,
+                                           k_denom, state.ef_resid)
         elif sparse:
             # gather-compute-scatter: only the K selected clients descend
             bidx = _batch_indices(k_batch, n, shard, fl.batch_size)
@@ -426,12 +460,24 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             w_sel = jax.vmap(local_update,
                              in_axes=(None, None, 0, 0))(state.w, eta, xb_s, yb_s)
             sel_w = mask[sel_idx]  # 0 for availability/battery-gated slots
+            ef_new = state.ef_resid
             if scheme == "quantized":
                 # sel_idx addresses the rounding streams, so the K gathered
                 # rows quantize bit-identically to the dense [N] program's
                 w_new = quantized_aggregate_stack_tree(
                     state.w, w_sel, sel_w, sel_idx, k_noise, noise_std,
                     point.transport.bits, k_denom)
+            elif scheme == "sparse":
+                # the K winners' residual rows ride the same gather/scatter
+                # as their batches: compression is a within-row threshold,
+                # so the gathered rows compress bit-identically to dense;
+                # gated slots (weight 0) keep their residual, and sel_idx
+                # is a top-k output (unique), so the scatter-back is exact
+                resid_sel = state.ef_resid[sel_idx]
+                w_new, resid_new = sparse_aggregate_stack_tree(
+                    state.w, w_sel, sel_w, k_noise, noise_std, k_coords,
+                    k_denom, resid_sel)
+                ef_new = state.ef_resid.at[sel_idx].set(resid_new)
             else:
                 w_new = aircomp_aggregate_stack_tree(
                     w_sel, sel_w, k_noise,
@@ -440,8 +486,9 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             xb, yb = sample_batches(k_batch)
             w_stack = jax.vmap(local_update,
                                in_axes=(None, None, 0, 0))(state.w, eta, xb, yb)
-            w_new = aggregate_full(point.transport, state.w, w_stack, mask,
-                                   mask_l, k_noise, noise_std, k_denom)
+            w_new, ef_new = aggregate_full(point.transport, state.w, w_stack,
+                                           mask, mask_l, k_noise, noise_std,
+                                           k_denom, state.ef_resid)
         if temporal or method == "gca":
             # the scheduled set can be EMPTY (battery/availability gating, or
             # GCA's thresholding): the PS then receives nothing over the air
@@ -453,10 +500,17 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
                 lambda agg, old: jnp.where(any_sched, agg, old), w_new, state.w)
 
         # ---- energy ledger (only the selected set transmits, priced under
-        # the round's uplink transport — analog is eqs. 3-6 verbatim)
+        # the round's uplink transport — analog is eqs. 3-6 verbatim; every
+        # listening client pays the broadcast receive, exactly zero at the
+        # default dl_rx_power = 0)
         e_round = transport_mod.round_energy(scheme, point.transport, h, mask,
                                              model_size, scen)
-        energy = state.energy + e_round
+        recv_count = jnp.sum(pstep.recv) if temporal else jnp.float32(n)
+        e_dl = recv_count * transport_mod.downlink_energy(
+            scheme, point.transport, model_size, scen,
+            num_tx=fl.clients_per_round)
+        dl_energy = state.dl_energy + e_dl
+        energy = state.energy + e_round + e_dl
 
         # ---- temporal carry: deplete batteries, persist the process state
         if temporal:
@@ -534,9 +588,10 @@ def make_param_round_fn(model: SimModel, fl: FLConfig, data, model_size: int,
             lam_max=lam_max,
             lam_entropy=lam_entropy,
             lam_ess=lam_ess,
+            dl_energy=dl_energy,
         )
         return SimState(w_new, lam_new, energy, key, chan_state,
-                        eval_cache, lam_snaps), metrics
+                        eval_cache, lam_snaps, ef_new, dl_energy), metrics
 
     return round_fn
 
@@ -609,6 +664,10 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
     n_rows = y.shape[0]  # == n unless mesh-sharded
     n_shards = n // n_rows if pop else 1
     kk = fl.clients_per_round
+    # sparse transport: static kept-coordinate count (fl.sparse_density is
+    # STRUCTURAL — it bakes the compiled top-k width)
+    k_coords = (sparse_k_coords(fl.sparse_density, model_size)
+                if scheme == "sparse" else None)
     grad_fn = jax.grad(model.loss)
     vloss = jax.vmap(model.loss, in_axes=(None, 0, 0))
     vacc = jax.vmap(model.accuracy, in_axes=(None, 0, 0))
@@ -670,7 +729,8 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             cs = state.chan_state
             pstep = step_process(k_chan, scen, proc, cs, n_rows,
                                  fl.num_subcarriers, model_size,
-                                 scheme=scheme, tp=point.transport, ids=ids)
+                                 scheme=scheme, tp=point.transport, ids=ids,
+                                 dl_num_tx=kk)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
         else:
             h = effective_channel(
@@ -725,6 +785,7 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
                                    in_axes=(0, None, 0, 0))(w1, eta, xb, yb)
             else:
                 w_stack = w1
+            ef_new = state.ef_resid
             if scheme == "quantized":
                 if pop:
                     w_new = quantized_aggregate_psum_tree(
@@ -734,6 +795,17 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
                     w_new = quantized_aggregate_stack_tree(
                         state.w, w_stack, mask_l, ids, k_noise, noise_std,
                         point.transport.bits, k_denom)
+            elif scheme == "sparse":
+                # residual rows stay shard-local: every device compresses
+                # and updates only its own clients' memory
+                if pop:
+                    w_new, ef_new = sparse_aggregate_psum_tree(
+                        state.w, w_stack, mask_l, k_noise, noise_std,
+                        k_coords, k_denom, state.ef_resid, axis_name)
+                else:
+                    w_new, ef_new = sparse_aggregate_stack_tree(
+                        state.w, w_stack, mask_l, k_noise, noise_std,
+                        k_coords, k_denom, state.ef_resid)
             else:
                 eff_noise = 0.0 if scheme == "digital" else noise_std
                 if pop:
@@ -772,10 +844,30 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             w_sel = jax.vmap(local_update,
                              in_axes=(None, None, 0, 0))(state.w, eta,
                                                          xb_s, yb_s)
+            ef_new = state.ef_resid
             if scheme == "quantized":
                 w_new = quantized_aggregate_stack_tree(
                     state.w, w_sel, sel_w, sel_idx, k_noise, noise_std,
                     point.transport.bits, k_denom)
+            elif scheme == "sparse":
+                # the winners' residual rows ride the same ownership-psum
+                # slot assembly as their batches ([K, P] rows, exact
+                # zeros), the [K]-slot compression runs replicated on
+                # every device, and each shard scatters back only its
+                # OWNED rows — duplicate-safe: non-owned clipped indices
+                # contribute a zero hit, owned top-k indices are unique
+                resid_sel = slot_vals(state.ef_resid, sel_idx)
+                w_new, resid_new = sparse_aggregate_stack_tree(
+                    state.w, w_sel, sel_w, k_noise, noise_std, k_coords,
+                    k_denom, resid_sel)
+                lidx = jnp.clip(sel_idx - off, 0, n_rows - 1)
+                owned = (sel_idx >= off) & (sel_idx < off + n_rows)
+                upd = jnp.zeros_like(state.ef_resid).at[lidx].add(
+                    jnp.where(owned[:, None], resid_new,
+                              jnp.zeros_like(resid_new)))
+                hit = jnp.zeros((n_rows,), jnp.float32).at[lidx].add(
+                    jnp.where(owned, 1.0, 0.0))
+                ef_new = jnp.where(hit[:, None] > 0, upd, state.ef_resid)
             else:
                 w_new = aircomp_aggregate_stack_tree(
                     w_sel, sel_w, k_noise,
@@ -790,7 +882,19 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             h_sel = slot_vals(h, sel_idx)
             e_round = jnp.sum(sel_w * transport_mod.uplink_energy(
                 scheme, point.transport, h_sel, model_size, scen))
-        energy = state.energy + e_round
+        # downlink: every receiver that can afford the listen window pays
+        # for the broadcast (psum-of-local-rows under pop; static N when the
+        # process model is off). dl_power=0 keeps the whole block an exact
+        # no-op (x + 0·anything = x), preserving pre-downlink trajectories.
+        if temporal:
+            rc = jnp.sum(pstep.recv)
+            recv_count = jax.lax.psum(rc, axis_name) if pop else rc
+        else:
+            recv_count = jnp.float32(n)
+        e_dl = recv_count * transport_mod.downlink_energy(
+            scheme, point.transport, model_size, scen, num_tx=kk)
+        dl_energy = state.dl_energy + e_dl
+        energy = state.energy + e_round + e_dl
 
         # ---- temporal carry (local rows only)
         if temporal:
@@ -884,9 +988,10 @@ def make_control_sharded_round_fn(model: SimModel, fl: FLConfig, data,
             lam_max=lam_max,
             lam_entropy=lam_entropy,
             lam_ess=lam_ess,
+            dl_energy=dl_energy,
         )
         return SimState(w_new, lam_new, energy, key, chan_state,
-                        eval_cache, lam_snaps), metrics
+                        eval_cache, lam_snaps, ef_new, dl_energy), metrics
 
     return round_fn
 
@@ -948,6 +1053,14 @@ def init_sim_state(model: SimModel, fl: FLConfig, key,
     # E > 1 carries the fixed [ceil(T/E), n_rows] strided buffer
     lam_snaps = () if e in (0, 1) else jnp.zeros(
         ((fl.rounds + e - 1) // e, n_rows), jnp.float32)
+    # sparse transport: per-client error-feedback memory over the FLAT model
+    # ([n_rows, P] — local rows only under the sharded control plane, same
+    # per-id row discipline as chan_state). Other transports carry the
+    # leaf-less () so their scan carries are byte-identical to before.
+    ef_resid = ()
+    if fl.transport == "sparse":
+        p = sum(int(l.size) for l in jax.tree_util.tree_leaves(w0))
+        ef_resid = jnp.zeros((n_rows, p), jnp.float32)
     return SimState(
         w=w0,
         lam=jnp.full((n_rows,), 1.0 / fl.num_clients),
@@ -956,6 +1069,8 @@ def init_sim_state(model: SimModel, fl: FLConfig, key,
         chan_state=chan_state,
         eval_cache=eval_cache,
         lam_snaps=lam_snaps,
+        ef_resid=ef_resid,
+        dl_energy=jnp.zeros(()),
     )
 
 

@@ -123,10 +123,15 @@ def sweep_point_from_config(fl: FLConfig) -> SweepPoint:
 # `record_lambda_every` changes the λ-history sub-program (per-round scan
 # output vs cond-gated strided snapshot carry vs no history leaf at all), so
 # cells with different cadences cannot share an executable.
+# `sparse_density` is structural FOR THE SPARSE SCHEME ONLY: it bakes the
+# compiled top-k width (`transport.sparse_k_coords`); the other schemes never
+# read it, but keeping it in the signature unconditionally is harmless (cells
+# that differ only in an unread knob are rare) and keeps the grouping rule
+# free of scheme-conditional logic.
 STATIC_FIELDS: Tuple[str, ...] = (
     "num_clients", "clients_per_round", "rounds", "batch_size", "local_steps",
     "num_subcarriers", "flat_fading", "temporal", "eval_every", "transport",
-    "method", "control_plane", "record_lambda_every",
+    "sparse_density", "method", "control_plane", "record_lambda_every",
 )
 
 
@@ -333,7 +338,8 @@ def _history_template(fl: FLConfig, num_seeds: int) -> SimHistory:
                       energy=z(r, t), loss=z(r, t), num_scheduled=z(r, t),
                       lam=lam, avail_count=z(r, t),
                       min_battery=z(r, t), lam_max=z(r, t),
-                      lam_entropy=z(r, t), lam_ess=z(r, t))
+                      lam_entropy=z(r, t), lam_ess=z(r, t),
+                      dl_energy=z(r, t))
 
 
 def run_sweep(
@@ -548,6 +554,7 @@ class SweepResult:
             worst = np.asarray(h.worst_acc)[:, eval_idx].mean(1)  # [R]
             std = np.asarray(h.std_acc)[:, eval_idx].mean(1)     # [R]
             energy = np.asarray(h.energy)[:, -1]                 # [R]
+            dl_energy = np.asarray(h.dl_energy)[:, -1]           # [R]
             sched = np.asarray(h.num_scheduled)[:, -window:].mean(1)  # [R]
             avail = np.asarray(h.avail_count)[:, -window:].mean(1)    # [R]
             min_batt = float(np.asarray(h.min_battery)[:, -1].mean())
@@ -576,6 +583,9 @@ class SweepResult:
                 "client_std": float(std.mean()),
                 "energy": float(energy.mean()),
                 "energy_std": float(energy.std()),
+                # downlink share of the TOTAL `energy` column (additive; 0
+                # at the default dl_rx_power=0)
+                "dl_energy": float(dl_energy.mean()),
                 "num_scheduled": float(sched.mean()),
                 "avail_count": float(avail.mean()),
                 # None (JSON null) for static scenarios, where it is +inf

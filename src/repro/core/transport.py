@@ -29,6 +29,32 @@ first-class, sweepable axis with three schemes:
     energy is P × latency. Error-free decode means aggregation is the plain
     masked weighted mean with NO superposition noise — the
     clean-but-costly comparison point.
+  - ``"sparse"`` — Jin et al. (arXiv:2004.07351)-style top-k sparsified
+    AirComp with per-client error-feedback memory: each client adds its
+    persistent residual to the fresh delta, keeps only the
+    k = max(1, round(``density``·P)) largest-magnitude coordinates (the
+    rest feed back into the residual for the NEXT round), and the sparse
+    payloads superpose over the air under the same AWGN discipline as
+    analog. Airtime prices the compressed payload — density·(32 + log2 P)
+    bits per kept coordinate (value + index) — so upload energy scales by
+    ``sparse_payload_frac``. The compress-scale-sum-noise-normalize pass is
+    fused (``repro.kernels.aircomp.sparse_aircomp_*``). Compression is
+    DETERMINISTIC (a per-row magnitude threshold at the k-th largest
+    coordinate), so dense [N], gathered [K] and population-sharded rows
+    select bit-identical supports with no new randomness stream; the
+    error-feedback residual is per-client carried STATE — a new scan-carry
+    leaf (``SimState.ef_resid`` / ``ServerState.ef_resid``) indexed by
+    global client id, per the dynamics-module rule (new per-client state =
+    new carry leaf + new fold_in streams; never re-split existing keys).
+
+This module also owns :func:`downlink_energy`: the per-round broadcast of
+the global model is no longer free — every available receiver pays
+``dl_power`` × the broadcast airtime, with the airtime scaled by the same
+per-scheme payload fraction as the uplink (full f32 for analog/digital,
+``bits``/32 for quantized, the K-union compressed payload for sparse). The
+default ``dl_power = 0.0`` prices the broadcast at exactly zero, keeping
+every pre-downlink trajectory bit-for-bit (the ledger columns are
+additive; x − 0 = x elementwise).
 
 Contract (the "Transport contract" section of the README has the long
 form): the *scheme* is structural — ``FLConfig.transport`` joins
@@ -48,6 +74,7 @@ per-client uniforms (the same trick the control plane uses for replicated
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any
 
@@ -57,17 +84,21 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core.aircomp import flat_awgn, stack_accum_dtype
 from repro.core.energy import TRUNCATION_FLOOR, transmit_energy
-from repro.kernels.aircomp.ops import quant_aircomp_flat
+from repro.kernels.aircomp.ops import quant_aircomp_flat, sparse_aircomp_flat
 
 __all__ = [
     "TRANSPORTS", "ANALOG_BITS", "TransportParams", "transport_from_config",
     "quant_step", "quantize_rows", "uplink_energy", "round_energy",
+    "downlink_energy", "sparse_payload_frac", "sparse_k_coords",
+    "sparse_thresholds", "sparse_compress_rows",
     "digital_rate", "digital_latency", "digital_energy",
     "quantized_aggregate_stack_tree", "quantized_aggregate_psum_tree",
     "quantized_aggregate_flat_rows", "flat_awgn_like",
+    "sparse_aggregate_stack_tree", "sparse_aggregate_psum_tree",
+    "sparse_aggregate_flat_rows",
 ]
 
-TRANSPORTS = ("analog", "quantized", "digital")
+TRANSPORTS = ("analog", "quantized", "digital", "sparse")
 
 # the analog scheme's implicit payload precision: one f32 symbol stream per
 # parameter. Quantized airtime (hence energy) scales by bits/ANALOG_BITS.
@@ -93,12 +124,16 @@ class TransportParams:
     tx_power: Any = 0.1    # digital uplink transmit power P (W)
     bandwidth: Any = 1e5   # digital per-client OFDMA subband B (Hz)
     rx_noise: Any = 1e-2   # digital receiver noise+interference power N0 (W)
+    # lint: allow(single-source-literal): coincidental value collision with energy.TRUNCATION_FLOOR — this is FLConfig.sparse_density's default (kept-fraction), not the paper's channel-truncation constant
+    density: Any = 0.05    # sparse kept-coordinate fraction (energy pricing)
+    dl_power: Any = 0.0    # downlink broadcast receive power (W); 0 = free
     scheme: str = "analog"
 
 
 jax.tree_util.register_dataclass(
     TransportParams,
-    data_fields=["bits", "tx_power", "bandwidth", "rx_noise"],
+    data_fields=["bits", "tx_power", "bandwidth", "rx_noise", "density",
+                 "dl_power"],
     meta_fields=["scheme"],
 )
 
@@ -114,6 +149,8 @@ def transport_from_config(fl: FLConfig) -> TransportParams:
         tx_power=f32(fl.tx_power),
         bandwidth=f32(fl.ofdma_bandwidth),
         rx_noise=f32(fl.rx_noise),
+        density=f32(fl.sparse_density),
+        dl_power=f32(fl.dl_rx_power),
         scheme=fl.transport,
     )
 
@@ -131,6 +168,12 @@ def transport_from_config(fl: FLConfig) -> TransportParams:
 # poisons the ledger and battery gating for EVERY client)
 _MIN_RATE = 1e-12
 
+# receiver-noise floor (W) of the same guard, on the OTHER side of the SNR
+# ratio: a sweep grid touching rx_noise=0 gave SNR=inf → rate=inf →
+# latency=0 → a ZERO-COST digital uplink, which is free energy corrupting
+# every Pareto front digital appears on (the dual of the _MIN_RATE hole)
+_MIN_NOISE = 1e-12
+
 
 def digital_rate(h_eff, tp: TransportParams, floor=TRUNCATION_FLOOR):
     """Per-client Shannon rate r_i = B·log2(1 + P·|h_i|²/N₀) (bits/s).
@@ -139,10 +182,12 @@ def digital_rate(h_eff, tp: TransportParams, floor=TRUNCATION_FLOOR):
     (h below the paper's threshold would drive the rate — and hence the
     latency/energy below — to infinity); the rate itself is additionally
     clamped to a tiny positive floor so zero-valued power/bandwidth knobs
-    price as astronomically-expensive-but-finite instead of inf/NaN.
+    price as astronomically-expensive-but-finite instead of inf/NaN, and
+    the noise knob to a tiny positive floor so ``rx_noise = 0`` prices as
+    an enormous-but-FINITE rate instead of a free (zero-latency) upload.
     """
     h = jnp.maximum(h_eff, floor)
-    snr = tp.tx_power * jnp.square(h) / tp.rx_noise
+    snr = tp.tx_power * jnp.square(h) / jnp.maximum(tp.rx_noise, _MIN_NOISE)
     return jnp.maximum(tp.bandwidth * jnp.log2(1.0 + snr), _MIN_RATE)
 
 
@@ -171,28 +216,87 @@ def digital_energy(h_eff, model_size: int, tp: TransportParams,
     return tp.tx_power * digital_latency(h_eff, model_size, tp, floor)
 
 
+def sparse_payload_frac(density, model_size: int, num_tx: int = 1):
+    """Airtime fraction of one sparse payload relative to the f32 dense one.
+
+    Each kept coordinate ships its f32 value plus a ⌈log2 P⌉-bit index, so
+    ``num_tx`` superposed/unioned sparse payloads cost
+    ``num_tx · density · (32 + log2 P) / 32`` of the dense airtime, capped
+    at 1.0 (a union can never cost more than just broadcasting densely).
+    ``density`` is traced; ``model_size``/``num_tx`` are static.
+    """
+    idx_bits = math.log2(max(model_size, 2))
+    frac = num_tx * density * (ANALOG_BITS + idx_bits) / ANALOG_BITS
+    return jnp.minimum(jnp.asarray(frac, jnp.float32), 1.0)
+
+
 def uplink_energy(scheme: str, tp, h_eff, model_size: int, scenario):
     """Per-client upload energy [..., N] under the given transport scheme.
 
     ``scenario`` is the round's ``ChannelScenario`` (psi/tau/floor traced).
     Analog is eqs. (3-6) verbatim; quantized scales the analog airtime by
-    ``bits/ANALOG_BITS``; digital is the OFDMA rate/latency accounting.
+    ``bits/ANALOG_BITS`` (billed bits floored at 1 — a bits→0 grid cell
+    must price its one-level payload, not upload for free, matching the
+    ``_MIN_RATE`` no-free-energy rule); digital is the OFDMA rate/latency
+    accounting; sparse scales the analog airtime by the compressed-payload
+    fraction (value + index bits per kept coordinate).
     """
     if scheme == "analog":
         return transmit_energy(h_eff, model_size, scenario.psi, scenario.tau,
                                floor=scenario.floor)
     if scheme == "quantized":
+        billed = jnp.maximum(tp.bits, 1.0)
         return transmit_energy(h_eff, model_size, scenario.psi, scenario.tau,
-                               floor=scenario.floor) * (tp.bits / ANALOG_BITS)
+                               floor=scenario.floor) * (billed / ANALOG_BITS)
     if scheme == "digital":
         return digital_energy(h_eff, model_size, tp, floor=scenario.floor)
+    if scheme == "sparse":
+        return transmit_energy(h_eff, model_size, scenario.psi, scenario.tau,
+                               floor=scenario.floor) \
+            * sparse_payload_frac(tp.density, model_size)
     raise ValueError(f"unknown transport scheme {scheme!r}")
 
 
-def round_energy(scheme: str, tp, h_eff, mask, model_size: int, scenario):
-    """Cumulative round energy of the selected set under the scheme."""
-    return jnp.sum(mask * uplink_energy(scheme, tp, h_eff, model_size,
-                                        scenario))
+def downlink_energy(scheme: str, tp, model_size: int, scenario,
+                    num_tx: int = 1):
+    """Per-receiver energy of ONE global-model broadcast (Joules).
+
+    The broadcast airtime is ``model_size · tau`` symbols scaled by the
+    per-scheme payload fraction — full f32 for analog/digital (the PS sends
+    the exact model), ``bits/ANALOG_BITS`` for quantized (it can re-quantize
+    the broadcast on the same grid; billed bits floored at 1 like the
+    uplink), and the K-union sparse payload for sparse (``num_tx`` =
+    scheduled-set size: after aggregating K sparse uploads the model delta's
+    support is at most the union of their supports — a conservative, static
+    bound the ledger uses on every path). Each receiver pays
+    ``dl_power × airtime``; the default ``dl_power = 0`` makes the whole
+    column exactly zero, so pre-downlink trajectories stay bit-for-bit.
+    """
+    if scheme in ("analog", "digital"):
+        frac = 1.0
+    elif scheme == "quantized":
+        frac = jnp.maximum(tp.bits, 1.0) / ANALOG_BITS
+    elif scheme == "sparse":
+        frac = sparse_payload_frac(tp.density, model_size, num_tx=num_tx)
+    else:
+        raise ValueError(f"unknown transport scheme {scheme!r}")
+    return tp.dl_power * model_size * scenario.tau * frac
+
+
+def round_energy(scheme: str, tp, h_eff, mask, model_size: int, scenario,
+                 recv_count=None, dl_num_tx: int = 1):
+    """Cumulative round energy of the selected set under the scheme.
+
+    ``recv_count`` (optional traced scalar) adds the downlink side: the
+    number of clients that received the round's broadcast, each billed
+    :func:`downlink_energy`. ``None`` keeps the uplink-only ledger.
+    """
+    total = jnp.sum(mask * uplink_energy(scheme, tp, h_eff, model_size,
+                                         scenario))
+    if recv_count is not None:
+        total = total + recv_count * downlink_energy(
+            scheme, tp, model_size, scenario, num_tx=dl_num_tx)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -205,9 +309,14 @@ def quant_step(flat_rows: jnp.ndarray, bits) -> jnp.ndarray:
 
     Each client scales its own payload into [−scale, scale] and rounds on a
     (2^bits)-level uniform grid; an all-zero row gets Δ = 0 (the quantizer
-    passes it through unchanged).
+    passes it through unchanged). The level count is floored at 1: a
+    bits-grid touching 0 gave ``levels = 2⁰ − 1 = 0`` → Δ = inf →
+    ``floor(x/inf + u)·inf = 0·inf = NaN`` payloads poisoning the whole
+    aggregate; bits ≤ 1 now rounds on the coarsest finite grid instead
+    (the ``_MIN_RATE``-style degenerate-knob guard).
     """
-    levels = jnp.exp2(jnp.asarray(bits, flat_rows.dtype)) - 1.0
+    levels = jnp.maximum(
+        jnp.exp2(jnp.asarray(bits, flat_rows.dtype)) - 1.0, 1.0)
     return 2.0 * jnp.max(jnp.abs(flat_rows), axis=-1) / levels
 
 
@@ -364,3 +473,176 @@ def quantized_aggregate_psum_tree(w_base, trees_local, weights_local,
     if not (isinstance(noise_std, (int, float)) and noise_std == 0):
         total = total + noise_std * flat_awgn(key, leaves, dtype=acc_dtype)
     return _unflatten_like(base_flat + total / k, leaves, treedef)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (error-feedback top-k) aggregation — dense/gathered-K/psum
+# ---------------------------------------------------------------------------
+
+
+def sparse_k_coords(density: float, model_size: int) -> int:
+    """STATIC kept-coordinate count k = clip(round(density·P), 1, P).
+
+    ``density`` here is the structural ``FLConfig.sparse_density`` (a Python
+    float — it bakes the compiled ``top_k`` width), NOT the traced
+    ``TransportParams.density`` copy the energy ledger prices with.
+    """
+    return max(1, min(int(round(density * model_size)), model_size))
+
+
+def sparse_thresholds(v_rows: jnp.ndarray, k_coords: int) -> jnp.ndarray:
+    """Per-row top-k magnitude separator, [C].
+
+    The compression mask is ``|v| >= thr`` and keeps EXACTLY the row's k
+    largest-|coordinate| set: ``thr`` is the shortest bit-prefix separating
+    the k-th from the (k+1)-th largest magnitude (any value in that gap
+    selects the same support), falling back to the k-th largest value
+    itself when magnitude ties make an exact-k separator impossible — then
+    every tied coordinate rides along (a superset of k; the energy ledger
+    prices the nominal density, documented conservative). A DETERMINISTIC
+    within-row property either way, so the dense [N], gathered [K] and
+    population-sharded layouts select bit-identical supports with no
+    per-client randomness stream. An all-zero row gets thr = 0, selects
+    itself entirely and contributes exact zeros.
+    """
+    mags = jnp.abs(v_rows)
+    if jnp.dtype(mags.dtype).itemsize > 4:
+        # radix select below is f32-bit-pattern based; wider dtypes take the
+        # (rare, correctness-only) top_k route with full precision
+        return jax.lax.top_k(mags, k_coords)[0][..., -1]
+    # MSB-first radix select on the f32 bit pattern: nonnegative floats
+    # order exactly like their int32 bits, so growing the largest prefix t
+    # with count(bits >= t) >= k converges on the k-th largest magnitude in
+    # at most 31 compare-and-count passes — no sort/top_k primitive (XLA's
+    # CPU sort is ~15x slower on the [K, P] payload stack; see BENCH_perf's
+    # sparse_vs_analog floor). Early exit: a row freezes at its FIRST
+    # prefix counting EXACTLY k — that prefix already separates the k-th
+    # from the (k+1)-th coordinate, deeper bits cannot change the kept set
+    # (the count(>= prefix) >= k invariant only tightens), and typical
+    # payloads resolve in ~half the passes; tied/degenerate rows never hit
+    # an exact-k count and fall through to the full 31, landing on the k-th
+    # largest value itself. The count is phrased as a dot with ones so XLA
+    # lowers it through the gemv path rather than a scalar reduce loop.
+    bits = jax.lax.bitcast_convert_type(mags.astype(jnp.float32), jnp.int32)
+    ones = jnp.ones((bits.shape[-1],), jnp.float32)
+    kf = jnp.float32(k_coords)
+
+    def _cond(carry):
+        i, _, cnt = carry
+        return (i < 31) & jnp.any(cnt != kf)
+
+    def _bit(carry):
+        i, prefix, cnt = carry
+        cand = prefix | (jnp.int32(1) << (jnp.int32(30) - i))
+        cnt_cand = jnp.dot((bits >= cand[..., None]).astype(jnp.float32),
+                           ones)
+        # freeze a row at its FIRST exact-k prefix: the frozen value is a
+        # pure per-row function (independent of how long slower rows keep
+        # the loop alive), so every layout computes the identical threshold
+        take = (cnt != kf) & (cnt_cand >= kf)
+        return (i + 1, jnp.where(take, cand, prefix),
+                jnp.where(take, cnt_cand, cnt))
+
+    shape = mags.shape[:-1]
+    _, prefix, _ = jax.lax.while_loop(
+        _cond, _bit, (jnp.int32(0), jnp.zeros(shape, jnp.int32),
+                      jnp.full(shape, jnp.float32(mags.shape[-1]))))
+    return jax.lax.bitcast_convert_type(prefix, jnp.float32)
+
+
+def sparse_compress_rows(v_rows: jnp.ndarray, k_coords: int):
+    """Top-k compress payload rows [C, P]; returns ``(c_rows, thr)``.
+
+    The pure-jnp reference of the fused sparse kernel: ``c = v · 1{|v| ≥
+    thr}`` with ``thr`` from :func:`sparse_thresholds`. The error-feedback
+    residual update ``v − c`` recomputes this exact mask (same f32
+    compare), so telescoping Σc + residual == Σv holds bitwise per round.
+    """
+    thr = sparse_thresholds(v_rows, k_coords)
+    c = jnp.where(jnp.abs(v_rows) >= thr[..., None], v_rows, 0.0)
+    return c, thr
+
+
+def sparse_aggregate_flat_rows(base_flat, delta_rows, resid_rows, weights,
+                               key, noise_std, k_coords: int, k, z=None,
+                               use_pallas: bool | None = None):
+    """Fused sparse eq. (10) over flat delta rows with error feedback:
+    ``(base + (Σ_c w_c·C(Δ_c + r_c) + σz)/k, r')``.
+
+    ``delta_rows`` [C, P] are per-client payloads, ``resid_rows`` [C, P] the
+    carried error-feedback memory. Each client compresses v = Δ + r to its
+    top-``k_coords`` coordinates; the kept values aggregate in ONE fused
+    compress-scale-sum-AWGN-normalize pass (``sparse_aircomp_flat``: Pallas
+    on TPU, jnp elsewhere) and the dropped mass v − C(v) becomes the new
+    residual. Gated slots (weight 0) transmit nothing and KEEP their old
+    residual — their v never left the device. ``key`` is accepted for
+    signature symmetry with the quantized path (compression is
+    deterministic; the AWGN ``z`` is pre-drawn by the caller).
+    """
+    del key  # deterministic compression — no per-client stream consumed
+    v = delta_rows + resid_rows.astype(delta_rows.dtype)
+    thr = sparse_thresholds(v, k_coords)
+    if z is None:
+        z = jnp.zeros((delta_rows.shape[-1],), delta_rows.dtype)
+        noise_std = 0.0
+    agg = sparse_aircomp_flat(v, weights, thr, z, noise_std=noise_std, k=k,
+                              use_pallas=use_pallas)
+    c = jnp.where(jnp.abs(v) >= thr[..., None], v, 0.0)
+    sent = (weights > 0)[..., None]
+    new_resid = jnp.where(sent, (v - c).astype(resid_rows.dtype), resid_rows)
+    return base_flat + agg, new_resid
+
+
+def sparse_aggregate_stack_tree(w_base, trees, weights, key, noise_std,
+                                k_coords: int, k, resid_rows,
+                                use_pallas: bool | None = None):
+    """Sparse-transport eq. (10) over a client-stacked pytree.
+
+    ``trees``: leading client/slot axis C (N dense, K gathered) on every
+    leaf; ``resid_rows`` [C, P]: those clients' error-feedback rows (the
+    caller gathers/scatters them against the global ``ef_resid`` leaf by
+    client id). Returns ``(new_tree, new_resid_rows)``. AWGN keeps the
+    per-leaf discipline of the analog paths (``flat_awgn`` on ``key``), so
+    density→1 recovers the analog aggregate with the identical noise
+    realization.
+    """
+    leaves, treedef, flat, acc_dtype = _flatten_stack(trees)
+    base_flat = _flatten_base(w_base, acc_dtype)
+    delta = flat - base_flat[None, :]
+    if isinstance(noise_std, (int, float)) and noise_std == 0:
+        z = None
+    else:
+        z = flat_awgn(key, leaves, dtype=acc_dtype)
+    new_flat, new_resid = sparse_aggregate_flat_rows(
+        base_flat, delta, resid_rows, weights, key, noise_std, k_coords, k,
+        z=z, use_pallas=use_pallas)
+    return _unflatten_like(new_flat, leaves, treedef), new_resid
+
+
+def sparse_aggregate_psum_tree(w_base, trees_local, weights_local, key,
+                               noise_std, k_coords: int, k, resid_local,
+                               axis_name: str = "clients"):
+    """Population-sharded sparse eq. (10): local compressed partial-sum +
+    ``psum`` + replicated AWGN + 1/k + w̄; returns ``(new_tree,
+    new_resid_local)``.
+
+    Compression is a within-row magnitude threshold, so each shard's rows
+    compress bit-identically to the dense program's (no client-id streams
+    needed) and the sharded aggregate differs from dense only in the
+    cross-shard summation order — the same contract as
+    ``quantized_aggregate_psum_tree``. Residual rows stay SHARD-LOCAL:
+    each device updates only its own clients' memory.
+    """
+    leaves, treedef, flat, acc_dtype = _flatten_stack(trees_local)
+    base_flat = _flatten_base(w_base, acc_dtype)
+    delta = flat - base_flat[None, :]
+    v = delta + resid_local.astype(acc_dtype)
+    c, _ = sparse_compress_rows(v, k_coords)
+    partial = jnp.einsum("cp,c->p", c, weights_local.astype(acc_dtype))
+    total = jax.lax.psum(partial, axis_name)
+    if not (isinstance(noise_std, (int, float)) and noise_std == 0):
+        total = total + noise_std * flat_awgn(key, leaves, dtype=acc_dtype)
+    sent = (weights_local > 0)[..., None]
+    new_resid = jnp.where(sent, (v - c).astype(resid_local.dtype),
+                          resid_local)
+    return _unflatten_like(base_flat + total / k, leaves, treedef), new_resid

@@ -60,6 +60,11 @@ class ServerState:
     # (rounds t % E == 0; empty at E=0) — the production-tier mirror of the
     # simulator's SimHistory.lam recorder
     lam_snaps: List = field(default_factory=list)
+    # sparse transport only: per-client error-feedback memory [N, P] (the
+    # production-tier mirror of SimState.ef_resid); () for other schemes
+    ef_resid: Any = ()
+    # cumulative downlink share of energy_joules (which is the TOTAL ledger)
+    dl_energy_joules: float = 0.0
 
 
 class ParameterServer:
@@ -87,14 +92,16 @@ class ParameterServer:
         self.transport = transport_mod.transport_from_config(fl)
         self._round_noise = 0.0 if fl.transport == "digital" else fl.noise_std
         quantized = fl.transport == "quantized"
-        # the quantized transport's round is ALWAYS the fused quantized-delta
-        # aggregate (_make_quant_apply below) — the dense round and the
-        # selected-K gather round would be dead objects, so they are not
-        # built for it (there is no dense fallback: the delta probe needs
-        # the canonical one-block-per-client batch layout).
+        sparse = fl.transport == "sparse"
+        # the quantized/sparse transports' round is ALWAYS the fused
+        # compressed-delta aggregate (_make_quant_apply/_make_sparse_apply
+        # below) — the dense round and the selected-K gather round would be
+        # dead objects, so they are not built for them (there is no dense
+        # fallback: the delta probe needs the canonical
+        # one-block-per-client batch layout).
         self.round_fn = None
         self._gather_round = None
-        if not quantized:
+        if not (quantized or sparse):
             self.round_fn = make_fl_round(
                 model, optimizer, fl.num_clients, fl.clients_per_round,
                 noise_std=self._round_noise, ctx=ctx)
@@ -138,35 +145,42 @@ class ParameterServer:
         if fl.method == "gca":
             self._grad_probe = make_grad_norm_probe(
                 model, fl.num_clients, ctx=ctx,
-                with_grads=reuse_probe_grads or quantized)
-            if not quantized:  # quantized rounds use _quant_apply instead
+                with_grads=reuse_probe_grads or quantized or sparse)
+            if not (quantized or sparse):  # else the fused delta apply runs
                 self._gca_apply = self._make_gca_apply()
                 if jit_round:
                     self._gca_apply = jax.jit(self._gca_apply)
             if jit_round:
                 self._grad_probe = jax.jit(self._grad_probe)
-        # Quantized transport: every client's payload is its stochastically-
-        # rounded SGD delta −η·g_i (the simulator's w_i − w̄ at one local
-        # step), so the server needs per-client gradients for ANY method —
-        # the same with_grads probe GCA reuses. The masked fused aggregate of
-        # the quantized deltas is applied directly (_make_quant_apply);
-        # tests/test_cross_tier.py pins it against one simulator round.
+        # Quantized/sparse transports: every client's payload is its SGD
+        # delta −η·g_i (the simulator's w_i − w̄ at one local step), so the
+        # server needs per-client gradients for ANY method — the same
+        # with_grads probe GCA reuses. The masked fused aggregate of the
+        # compressed deltas is applied directly (_make_quant_apply /
+        # _make_sparse_apply); tests/test_cross_tier.py pins both against
+        # one simulator round.
         self._delta_probe = None
-        if quantized:
+        self._quant_apply = self._sparse_apply = None
+        if quantized or sparse:
             import warnings
             warnings.warn(
-                "transport='quantized' applies the paper's SGD aggregation "
-                "directly: per-client deltas are -eta*grad with eta = "
-                "fl.lr0 * fl.lr_decay**round (matching the simulator tier); "
-                "the passed optimizer's update rule is NOT used and its "
-                "state passes through untouched", stacklevel=2)
+                f"transport={fl.transport!r} applies the paper's SGD "
+                "aggregation directly: per-client deltas are -eta*grad with "
+                "eta = fl.lr0 * fl.lr_decay**round (matching the simulator "
+                "tier); the passed optimizer's update rule is NOT used and "
+                "its state passes through untouched", stacklevel=2)
             self._delta_probe = (self._grad_probe or make_grad_norm_probe(
                 model, fl.num_clients, ctx=ctx, with_grads=True))
-            self._quant_apply = self._make_quant_apply()
+            apply_fn = (self._make_quant_apply() if quantized
+                        else self._make_sparse_apply())
             if jit_round:
                 if self._grad_probe is None:
                     self._delta_probe = jax.jit(self._delta_probe)
-                self._quant_apply = jax.jit(self._quant_apply)
+                apply_fn = jax.jit(apply_fn)
+            if quantized:
+                self._quant_apply = apply_fn
+            else:
+                self._sparse_apply = apply_fn
         # control-channel loss probe for rounds where NOBODY transmits
         # (battery/availability gating): the λ-ascent still needs f_i(w̄)
         self._loss_probe = lambda p, b: per_client_losses(
@@ -232,6 +246,35 @@ class ParameterServer:
 
         return apply_fn
 
+    def _make_sparse_apply(self):
+        """The sparse-transport round: each client's payload is its SGD delta
+        −η·g_i plus its carried error-feedback residual, top-k compressed and
+        aggregated in the fused masked eq. (10) pass
+        (``transport.sparse_aggregate_flat_rows``) — numerically one
+        simulator round at local_steps=1 (pinned by
+        ``tests/test_cross_tier.py``). The dropped mass becomes the new
+        residual for the transmitting clients; gated clients keep theirs.
+        The server optimizer is bypassed exactly as in the quantized round."""
+        noise_std = self._round_noise
+        density = self.fl.sparse_density
+
+        def apply_fn(params, gflat, probe_losses, mask, key, eta, resid):
+            k_sched = jnp.maximum(jnp.sum(mask), 1.0)
+            flat, unravel = ravel_pytree(params)
+            flat = flat.astype(jnp.float32)
+            deltas = (-eta) * gflat
+            k_coords = transport_mod.sparse_k_coords(density, flat.shape[0])
+            z = (transport_mod.flat_awgn_like(key, params, jnp.float32)
+                 if noise_std else None)
+            new_flat, new_resid = transport_mod.sparse_aggregate_flat_rows(
+                flat, deltas, resid, mask, key,
+                noise_std if noise_std else 0.0, k_coords, k_sched, z=z)
+            gnorm = jnp.sqrt(jnp.sum(jnp.square(new_flat - flat))) / eta
+            loss = jnp.sum(mask * probe_losses) / k_sched
+            return unravel(new_flat), loss, gnorm, new_resid
+
+        return apply_fn
+
     def _gather_layout_ok(self, batch) -> bool:
         """The gather round indexes block j as client j's examples: verify
         (host-side, pre-jit) the canonical ascending-contiguous layout the
@@ -279,11 +322,17 @@ class ParameterServer:
                 chan_state = init_chan_state(
                     self.process, k_cs, self.fl.num_clients,
                     self.fl.num_subcarriers, self.fl.flat_fading)
+        # sparse transport: error-feedback memory starts empty (the first
+        # payload is the raw delta), same zeros-init as init_sim_state
+        ef_resid = (jnp.zeros((self.fl.num_clients, self._model_size),
+                              jnp.float32)
+                    if self.fl.transport == "sparse" else ())
         return ServerState(
             params=params,
             opt_state=self.optimizer.init(params),
             lam=jnp.full((self.fl.num_clients,), 1.0 / self.fl.num_clients),
             chan_state=chan_state,
+            ef_resid=ef_resid,
         )
 
     def step(self, state: ServerState, batch: Dict) -> ServerState:
@@ -309,7 +358,8 @@ class ParameterServer:
             pstep = step_process(k_chan, self.scenario, self.process, cs,
                                  fl.num_clients, fl.num_subcarriers,
                                  self._model_size, scheme=fl.transport,
-                                 tp=self.transport, ids=self._ids)
+                                 tp=self.transport, ids=self._ids,
+                                 dl_num_tx=fl.clients_per_round)
             h, avail, eligible = pstep.h, pstep.avail, pstep.eligible
         elif self._ids is not None:
             h = effective_channel(draw_channels_scenario_ids(
@@ -338,37 +388,50 @@ class ParameterServer:
                 fl.method, k_sel, state.lam, h, fl.clients_per_round,
                 C=fl.energy_C, avail=eligible, ids=self._ids)
             if self._delta_probe is not None:
-                # quantized transport: per-client deltas for the rounding
+                # quantized/sparse transport: per-client deltas to compress
                 try:
                     self._check_probe_layout(batch)
                 except ValueError as e:
                     raise ValueError(
-                        "transport='quantized' needs the canonical one-"
-                        "contiguous-block-per-client batch layout for its "
-                        f"per-client delta probe (no dense fallback): {e}"
+                        f"transport={fl.transport!r} needs the canonical "
+                        "one-contiguous-block-per-client batch layout for "
+                        f"its per-client delta probe (no dense fallback): {e}"
                     ) from e
                 _, probe_losses, gflat = self._delta_probe(
                     state.params, batch)
 
         # --- compiled round on the mesh ------------------------------------
+        ef_resid = state.ef_resid
+        if self._sparse_apply is not None and isinstance(ef_resid, tuple):
+            # a hand-built ServerState (tests/tools) that skipped init_state:
+            # error-feedback memory starts empty, same as init_state's zeros
+            ef_resid = jnp.zeros((fl.num_clients, self._model_size),
+                                 jnp.float32)
         if int(jnp.sum(mask)) == 0:
             # nothing transmits (drained batteries / empty availability):
             # the PS receives no superposition, so the global model must NOT
             # move (mirrors the simulator's empty-set guard) — only the
-            # control-channel loss probe runs, for the λ-ascent below
+            # control-channel loss probe runs, for the λ-ascent below.
+            # Error-feedback residuals also stay put: no payload left any
+            # device, so there is no dropped mass to remember.
             params, opt_state = state.params, state.opt_state
             metrics = FLRoundMetrics(
                 loss=jnp.zeros(()),
                 client_losses=self._loss_probe(state.params, batch),
                 grad_norm=jnp.zeros(()))
         elif self._delta_probe is not None:
-            # quantized transport (any method): apply the fused masked
-            # aggregate of the stochastically-rounded per-client deltas;
-            # η follows the simulator's decayed schedule at this round
+            # quantized/sparse transport (any method): apply the fused
+            # masked aggregate of the compressed per-client deltas; η
+            # follows the simulator's decayed schedule at this round
             eta = fl.lr0 * (fl.lr_decay ** state.round)
-            params, loss, gnorm = self._quant_apply(
-                state.params, gflat, probe_losses, mask, k_noise,
-                jnp.float32(eta))
+            if self._sparse_apply is not None:
+                params, loss, gnorm, ef_resid = self._sparse_apply(
+                    state.params, gflat, probe_losses, mask, k_noise,
+                    jnp.float32(eta), ef_resid)
+            else:
+                params, loss, gnorm = self._quant_apply(
+                    state.params, gflat, probe_losses, mask, k_noise,
+                    jnp.float32(eta))
             opt_state = state.opt_state
             metrics = FLRoundMetrics(
                 loss=loss,
@@ -394,10 +457,18 @@ class ParameterServer:
                 state.params, state.opt_state, batch, mask, k_noise)
 
         # --- energy ledger (only the selected set transmits, priced under
-        # the configured uplink transport; analog is eqs. 3-6 verbatim) -----
+        # the configured uplink transport; analog is eqs. 3-6 verbatim).
+        # Downlink: every receiver that can afford the listen window pays
+        # for the broadcast — same recv/num_tx rule as the simulator tier,
+        # an exact +0.0 at the default dl_rx_power=0 ----------------------
         e_round = float(transport_mod.round_energy(
             fl.transport, self.transport, h, mask, self._model_size,
             self.scenario))
+        recv_count = (float(jnp.sum(pstep.recv)) if self.process.temporal
+                      else float(fl.num_clients))
+        e_dl = float(recv_count * transport_mod.downlink_energy(
+            fl.transport, self.transport, self._model_size, self.scenario,
+            num_tx=fl.clients_per_round))
 
         # --- temporal carry: battery depletion + process state -------------
         if self.process.temporal:
@@ -421,7 +492,8 @@ class ParameterServer:
         row = {
             "round": state.round,
             "loss": float(metrics.loss),
-            "energy_j": e_round,
+            "energy_j": e_round + e_dl,
+            "dl_energy_j": e_dl,
             "num_scheduled": int(jnp.sum(mask)),
             "worst_client_loss": float(jnp.max(metrics.client_losses)),
             "grad_norm": float(metrics.grad_norm),
@@ -442,10 +514,12 @@ class ParameterServer:
         return ServerState(
             params=params, opt_state=opt_state, lam=lam,
             round=state.round + 1,
-            energy_joules=state.energy_joules + e_round,
+            energy_joules=state.energy_joules + e_round + e_dl,
             history=state.history,
             chan_state=chan_state,
             lam_snaps=state.lam_snaps,
+            ef_resid=ef_resid,
+            dl_energy_joules=state.dl_energy_joules + e_dl,
         )
 
     def run(self, state: ServerState, batches, rounds: int,

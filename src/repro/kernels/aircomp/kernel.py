@@ -65,6 +65,68 @@ def _quant_aircomp_kernel(ns_ref, ik_ref, x_ref, w_ref, d_ref, u_ref, z_ref,
     o_ref[...] = acc * ik_ref[0, 0]
 
 
+def _sparse_aircomp_kernel(ns_ref, ik_ref, x_ref, w_ref, t_ref, z_ref,
+                           o_ref):
+    """Fused compress-aggregate tile (the sparse transport's hot pass).
+
+    Same SMEM scalar layout as the quantized kernel (``ns_ref``/``ik_ref``
+    both (1, 1) f32, traced). Per-client VMEM operands: ``w_ref`` [C, 1]
+    mask/gain entries, ``t_ref`` [C, 1] per-client magnitude thresholds
+    (the k-th largest |payload| coordinate — computed OUTSIDE the kernel by
+    ``transport.sparse_thresholds``, the top-k does not tile over M). The
+    kernel fuses threshold-compress + scale + superposition-sum + AWGN +
+    normalize into one pass over the model dimension.
+    """
+    x = x_ref[...].astype(jnp.float32)          # [C, TM]
+    w = w_ref[...].astype(jnp.float32)          # [C, 1]
+    t = t_ref[...].astype(jnp.float32)          # [C, 1]
+    c = jnp.where(jnp.abs(x) >= t, x, 0.0)
+    acc = jnp.sum(c * w, axis=0)                # [TM]
+    acc = acc + ns_ref[0, 0] * z_ref[...].astype(jnp.float32)
+    o_ref[...] = acc * ik_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, thr: jnp.ndarray,
+                          z: jnp.ndarray, *, noise_std, k,
+                          interpret: bool = False) -> jnp.ndarray:
+    """x [C, M]; w/thr [C]; z [M] -> sparse-compressed aggregate [M] fp32.
+
+    Same blocking as :func:`quant_aircomp_pallas` (M padded to TILE_M, C
+    whole in VMEM); ``noise_std``/``k`` ride as (1, 1) SMEM scalars. A
+    zero-padded column passes the mask only when thr_c = 0 (an all-zero
+    payload row) and then contributes w·0 = 0, so padding never leaks.
+    """
+    c, m = x.shape
+    tile = min(TILE_M, m) if m % 128 == 0 else m
+    pad = (-m) % tile
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        z = jnp.pad(z, (0, pad))
+    mp = m + pad
+    grid = (mp // tile,)
+    ns = jnp.asarray(noise_std, jnp.float32).reshape(1, 1)
+    inv_k = (1.0 / jnp.asarray(k, jnp.float32)).reshape(1, 1)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        _sparse_aircomp_kernel,
+        grid=grid,
+        in_specs=[
+            scalar_spec,
+            scalar_spec,
+            pl.BlockSpec((c, tile), lambda i: (0, i)),
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=interpret,
+    )(ns, inv_k, x, w[:, None], thr[:, None], z)
+    return out[:m]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quant_aircomp_pallas(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
                          u: jnp.ndarray, z: jnp.ndarray,

@@ -12,8 +12,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.aircomp.kernel import aircomp_pallas, quant_aircomp_pallas
-from repro.kernels.aircomp.ref import aircomp_ref, quant_aircomp_ref
+from repro.kernels.aircomp.kernel import (aircomp_pallas,
+                                          quant_aircomp_pallas,
+                                          sparse_aircomp_pallas)
+from repro.kernels.aircomp.ref import (aircomp_ref, quant_aircomp_ref,
+                                       sparse_aircomp_ref)
 
 
 def on_tpu() -> bool:
@@ -60,3 +63,26 @@ def quant_aircomp_flat(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
         return quant_aircomp_pallas(x, w, d, u, z, noise_std=noise_std, k=k,
                                     interpret=not on_tpu())
     return quant_aircomp_ref(x, w, d, u, z, noise_std, k)
+
+
+def sparse_aircomp_flat(x: jnp.ndarray, w: jnp.ndarray, thr: jnp.ndarray,
+                        z: jnp.ndarray, *, noise_std, k,
+                        use_pallas: bool = None) -> jnp.ndarray:
+    """Fused compress-aggregate (Σ_c w_c·x_c·1{|x_c| ≥ thr_c} + σz)/k over
+    flat payload rows [C, M] (the sparse transport's eq. (10) hot pass).
+
+    ``thr`` [C] per-client magnitude thresholds (see
+    ``core/transport.sparse_thresholds`` — the top-k runs outside the
+    kernel, compression inside is one compare-and-mask). Dispatch mirrors
+    :func:`quant_aircomp_flat`: Pallas on TPU / interpret off-TPU when
+    forced, the jnp oracle otherwise, and always the dtype-preserving
+    oracle for wider-than-f32 buffers.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if jnp.dtype(x.dtype).itemsize > 4:
+        use_pallas = False
+    if use_pallas:
+        return sparse_aircomp_pallas(x, w, thr, z, noise_std=noise_std, k=k,
+                                     interpret=not on_tpu())
+    return sparse_aircomp_ref(x, w, thr, z, noise_std, k)

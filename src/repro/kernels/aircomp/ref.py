@@ -40,3 +40,22 @@ def quant_aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, d: jnp.ndarray,
                   x.astype(acc_t))
     acc = jnp.einsum("cm,c->m", q, w.astype(acc_t))
     return (acc + noise_std * z.astype(acc_t)) / k
+
+
+def sparse_aircomp_ref(x: jnp.ndarray, w: jnp.ndarray, thr: jnp.ndarray,
+                       z: jnp.ndarray, noise_std: float,
+                       k: float) -> jnp.ndarray:
+    """Compress-aggregate oracle: y = (Σ_c w_c·x_c·1{|x_c| ≥ thr_c} + σz)/k.
+
+    The sparse transport's eq. (10): each client keeps only its
+    above-threshold coordinates (``thr_c`` = the k-th largest |x_c|, drawn
+    by ``transport.sparse_thresholds`` OUTSIDE the kernel — compression is
+    deterministic). x [C, M]; w/thr [C]; z [M] -> [M] at max(x.dtype, f32)
+    precision. The mask compare runs at the accumulation dtype, bit-equal
+    to the residual update's recomputation in ``core/transport.py``.
+    """
+    acc_t = jnp.result_type(x.dtype, jnp.float32)
+    x_ = x.astype(acc_t)
+    c = jnp.where(jnp.abs(x_) >= thr[:, None].astype(acc_t), x_, 0.0)
+    acc = jnp.einsum("cm,c->m", c, w.astype(acc_t))
+    return (acc + noise_std * z.astype(acc_t)) / k

@@ -48,19 +48,25 @@ N, K, DIM, ROUNDS, BATCH = 8, 3, 8, 2, 4
 AXIS = "clients"
 EXACT_K_METHODS = ("fedavg", "afl", "ca_afl", "greedy")
 METHODS = EXACT_K_METHODS + ("gca",)
-TRANSPORTS = ("analog", "quantized", "digital")
+TRANSPORTS = ("analog", "quantized", "digital", "sparse")
 
 # Pinned collective budgets of the sharded round, per (method, transport):
 # psum count in the fully-traced T-round program (loop bodies counted once).
 # Derived from the real programs; a drift in either direction is a contract
 # change that must be reviewed (a new hidden collective, or a lost one).
 # Exact-K methods share one budget regardless of transport (aggregation rides
-# the same psum-tree shape); GCA's dense path differs per transport.
+# the same psum-tree shape) EXCEPT sparse, whose one extra psum is the
+# ownership assembly of the winners' error-feedback residual rows
+# (``slot_vals(state.ef_resid, sel_idx)``); GCA's dense path differs per
+# transport (sparse matches quantized: the fused partial-sum replaces the
+# per-leaf aggregation psums).
 PINNED_PSUMS: dict[tuple[str, str], int] = {
     **{(m, t): 14 for m in EXACT_K_METHODS for t in TRANSPORTS},
+    **{(m, "sparse"): 15 for m in EXACT_K_METHODS},
     ("gca", "analog"): 11,
     ("gca", "quantized"): 10,
     ("gca", "digital"): 11,
+    ("gca", "sparse"): 10,
 }
 
 

@@ -43,6 +43,7 @@ SHARDED_PATH_FUNCTIONS: dict[str, frozenset[str]] = {
     }),
     "core/transport.py": frozenset({
         "_client_uniforms", "quantized_aggregate_psum_tree",
+        "sparse_aggregate_psum_tree",
     }),
 }
 

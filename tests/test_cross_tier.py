@@ -129,18 +129,20 @@ def test_server_step_matches_simulator_round_temporal(tier_data):
 
 
 @pytest.mark.parametrize("method", ["ca_afl", "fedavg", "gca"])
-@pytest.mark.parametrize("transport", ["quantized", "digital"])
+@pytest.mark.parametrize("transport", ["quantized", "digital", "sparse"])
 def test_server_step_matches_simulator_round_transports(tier_data, transport,
                                                         method):
     """One ``ParameterServer.step`` == one simulator round under the
-    quantized and digital transports: same mask, λ, energy ledger and
-    aggregated weights. Quantized exercises the per-client stochastic-
+    quantized, digital and sparse transports: same mask, λ, energy ledger
+    and aggregated weights. Quantized exercises the per-client stochastic-
     rounding streams on both tiers (the server reconstructs each client's
     −η·g_i delta from the grad probe and rounds it with the simulator's
     fold_in discipline); digital exercises the OFDMA energy accounting with
-    the noise-free orthogonal decode."""
+    the noise-free orthogonal decode; sparse exercises the deterministic
+    top-k compression plus the error-feedback memory born at zeros on both
+    tiers."""
     xs, ys = tier_data
-    fl = _fl(method, transport=transport, quant_bits=6.0)
+    fl = _fl(method, transport=transport, quant_bits=6.0, sparse_density=0.25)
     sim_model = logistic_regression(DIM, CLS)
     point = sweep_point_from_config(fl)
     state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
@@ -166,6 +168,47 @@ def test_server_step_matches_simulator_round_transports(tier_data, transport,
                     jax.tree_util.tree_leaves(new_state.w), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+    if transport == "sparse":
+        # the error-feedback memory (the dropped mass) must agree too —
+        # a drift here silently compounds into every later round
+        np.testing.assert_allclose(np.asarray(srv.ef_resid),
+                                   np.asarray(new_state.ef_resid),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("transport",
+                         ["analog", "quantized", "digital", "sparse"])
+def test_server_downlink_ledger_matches_simulator(tier_data, transport):
+    """With a nonzero broadcast receive power, BOTH tiers price the downlink
+    identically for every scheme: one ``ParameterServer.step`` and one
+    simulator round agree on the total energy column AND its downlink share
+    (N receivers × per-model listen energy × the scheme's payload
+    fraction)."""
+    xs, ys = tier_data
+    fl = _fl("ca_afl", transport=transport, quant_bits=6.0,
+             sparse_density=0.25, dl_rx_power=2e-4)
+    sim_model = logistic_regression(DIM, CLS)
+    point = sweep_point_from_config(fl)
+    state = init_sim_state(sim_model, fl, jax.random.PRNGKey(0),
+                           process=point.process)
+    round_fn = make_param_round_fn(sim_model, fl, (xs, ys, xs, ys),
+                                   tree_size(state.w), "ca_afl")
+    new_state, hist = jax.jit(lambda p, s: round_fn(p, s, 0))(point, state)
+    assert float(hist.dl_energy) > 0.0
+
+    prod_model = logistic_regression_prod(DIM, CLS)
+    ps = ParameterServer(prod_model, sgd(fl.lr0), fl, seed=0)
+    ps.key = state.key
+    srv = ServerState(params=jax.tree.map(jnp.asarray, state.w),
+                      opt_state=sgd(fl.lr0).init(state.w),
+                      lam=state.lam)
+    srv = ps.step(srv, _prod_batch(xs, ys))
+    np.testing.assert_allclose(srv.dl_energy_joules, float(hist.dl_energy),
+                               rtol=1e-5)
+    np.testing.assert_allclose(srv.energy_joules, float(hist.energy),
+                               rtol=1e-5)
+    # downlink rides the TOTAL ledger additively
+    assert srv.energy_joules > srv.dl_energy_joules > 0.0
 
 
 def test_server_battery_depletion_matches_simulator_quantized(tier_data):

@@ -63,9 +63,14 @@ def test_sharded_round_temporal_program_still_clean():
 
 def test_exact_k_psum_census_transport_invariant():
     # exact-K aggregation rides the same psum-tree shape under every
-    # transport — pinned as a single shared budget
-    budgets = {jc.PINNED_PSUMS[(m, t)] for m in EXACT_K for t in TRANSPORTS}
-    assert len(budgets) == 1
+    # direct transport — pinned as a single shared budget; sparse pays
+    # exactly ONE extra psum, the ownership assembly of the winners'
+    # error-feedback residual rows
+    direct = {jc.PINNED_PSUMS[(m, t)] for m in EXACT_K
+              for t in TRANSPORTS if t != "sparse"}
+    assert len(direct) == 1
+    sparse = {jc.PINNED_PSUMS[(m, "sparse")] for m in EXACT_K}
+    assert sparse == {next(iter(direct)) + 1}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,230 @@
+"""Error-feedback sparse transport invariants (``transport="sparse"``).
+
+The compression contract (``core/transport.py``):
+
+  - **telescoping** — per round, kept + dropped == payload BITWISE
+    (``c = v·mask`` and ``v − c`` recompute the same f32 mask), so over a
+    run Σ compressed + final residual == Σ raw updates and no gradient mass
+    is ever silently lost;
+  - **layout determinism** — the top-k mask is a within-row magnitude
+    threshold with NO per-client randomness stream, so the dense [N],
+    gathered [K] and population-sharded row layouts select identical
+    supports;
+  - **state carry** — the residual is genuine simulation state: it rides
+    the scan carry, survives a checkpoint save/restore split exactly, and
+    gated (weight-0) clients keep theirs untouched;
+  - **density→1 recovery** — at ``sparse_density=1.0`` every coordinate is
+    kept, the residual stays zero and the sparse program reproduces the
+    analog trajectories with the identical AWGN realization.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.core.simulator import init_sim_state, make_round_fn, run_simulation
+from repro.core.transport import (sparse_aggregate_flat_rows,
+                                  sparse_compress_rows, sparse_k_coords,
+                                  sparse_thresholds)
+from repro.data.synthetic import make_fmnist_like
+from repro.federated.partition import sorted_label_shards
+from repro.models.logreg import logistic_regression
+from repro.utils.tree import tree_size
+
+N, DIM = 12, 32
+MODEL = logistic_regression(dim=DIM, num_classes=10)
+
+
+@pytest.fixture(scope="module")
+def tdata():
+    x, y, xt, yt = make_fmnist_like(num_train=600, num_test=240, dim=DIM,
+                                    seed=0)
+    xs, ys = sorted_label_shards(x, y, N)
+    xts, yts = sorted_label_shards(xt, yt, N)
+    return xs, ys, xts, yts
+
+
+def _fl(method="ca_afl", rounds=6, **kw):
+    return FLConfig(num_clients=N, clients_per_round=5, rounds=rounds,
+                    batch_size=16, method=method, lr0=0.3, lr_decay=0.995,
+                    ascent_lr=2e-2, transport="sparse", sparse_density=0.2,
+                    **kw)
+
+
+# ---------------------------------------------------------------------------
+# Telescoping: kept + dropped == payload, bitwise per round
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.property
+def test_compression_telescopes_bitwise_per_round():
+    """c + (v − c) == v with NO floating-point slack: the residual update
+    recomputes the kernel's exact mask, so kept coordinates cancel exactly
+    (v − v = 0) and dropped ones pass through exactly (v − 0 = v)."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (6, 257))
+    c, thr = sparse_compress_rows(v, 13)
+    np.testing.assert_array_equal(np.asarray(c + (v - c)), np.asarray(v))
+    # per row: at least k kept (ties keep extra), dropped strictly below thr
+    kept = np.asarray(jnp.abs(v) >= thr[:, None])
+    assert (kept.sum(1) >= 13).all()
+    assert (np.abs(np.asarray(v))[~kept] < np.asarray(thr)[
+        np.nonzero(~kept)[0]]).all()
+
+
+@pytest.mark.property
+def test_error_feedback_telescopes_over_rounds():
+    """Over T rounds of the fused aggregate (noise-free, all clients, k=1):
+    (base_T − base_0) + Σ_c resid_T == Σ_t Σ_c delta_t — the error-feedback
+    memory accounts for every unit of dropped gradient mass."""
+    key = jax.random.PRNGKey(1)
+    c, p, rounds, k_coords = 5, 120, 7, 11
+    base = jnp.zeros((p,))
+    resid = jnp.zeros((c, p))
+    w = jnp.ones((c,))
+    total = jnp.zeros((p,))
+    for t in range(rounds):
+        deltas = jax.random.normal(jax.random.fold_in(key, t), (c, p)) * 0.1
+        total = total + deltas.sum(0)
+        base, resid = sparse_aggregate_flat_rows(
+            base, deltas, resid, w, None, 0.0, k_coords, 1.0)
+    np.testing.assert_allclose(np.asarray(base + resid.sum(0)),
+                               np.asarray(total), rtol=1e-5, atol=1e-6)
+    # the residual is genuinely nonzero at density << 1 (mass IS deferred)
+    assert float(jnp.abs(resid).sum()) > 0.0
+
+
+@pytest.mark.property
+def test_gated_clients_keep_their_residual():
+    """A weight-0 slot transmits nothing: its payload never left the device,
+    so its error-feedback row must stay bit-identical (a zeroed or updated
+    row would leak a phantom upload into later rounds)."""
+    key = jax.random.PRNGKey(2)
+    deltas = jax.random.normal(key, (4, 64))
+    resid = jax.random.normal(jax.random.fold_in(key, 1), (4, 64)) * 0.01
+    w = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    base, new_resid = sparse_aggregate_flat_rows(
+        jnp.zeros((64,)), deltas, resid, w, None, 0.0, 7, 2.0)
+    np.testing.assert_array_equal(np.asarray(new_resid[1]),
+                                  np.asarray(resid[1]))
+    np.testing.assert_array_equal(np.asarray(new_resid[3]),
+                                  np.asarray(resid[3]))
+    assert not np.array_equal(np.asarray(new_resid[0]), np.asarray(resid[0]))
+
+
+# ---------------------------------------------------------------------------
+# Layout determinism: dense [N] / gathered [K] / sharded rows pick one mask
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.property
+def test_compression_mask_is_layout_independent():
+    """The threshold is a within-row property: any row subset (a gather, a
+    shard slice, a permutation) compresses each row bit-identically to the
+    dense [N] layout — the property that lets the three control-plane
+    layouts share one contract with no per-client randomness stream."""
+    v = jax.random.normal(jax.random.PRNGKey(3), (10, 300))
+    k_coords = 17
+    thr_dense = sparse_thresholds(v, k_coords)
+    c_dense, _ = sparse_compress_rows(v, k_coords)
+    idx = jnp.asarray([7, 2, 9])                      # a gathered-K layout
+    c_gath, thr_gath = sparse_compress_rows(v[idx], k_coords)
+    np.testing.assert_array_equal(np.asarray(thr_gath),
+                                  np.asarray(thr_dense[idx]))
+    np.testing.assert_array_equal(np.asarray(c_gath),
+                                  np.asarray(c_dense[idx]))
+    for lo, hi in ((0, 5), (5, 10)):                  # shard-local rows
+        c_loc, _ = sparse_compress_rows(v[lo:hi], k_coords)
+        np.testing.assert_array_equal(np.asarray(c_loc),
+                                      np.asarray(c_dense[lo:hi]))
+
+
+def test_sparse_k_coords_is_clamped_static():
+    assert sparse_k_coords(0.05, 1000) == 50
+    assert sparse_k_coords(0.0, 1000) == 1      # never an empty upload
+    assert sparse_k_coords(1e-9, 3) == 1
+    assert sparse_k_coords(2.0, 1000) == 1000   # never beyond the model
+    assert sparse_k_coords(1.0, 7) == 7
+
+
+# ---------------------------------------------------------------------------
+# State carry: scan, checkpoint split, density→1 analog recovery
+# ---------------------------------------------------------------------------
+
+
+def test_residual_survives_checkpoint_split(tdata, tmp_path):
+    """6 straight rounds == 3 rounds → checkpoint save/restore → 3 more,
+    bit-for-bit on the model AND the error-feedback leaf: the residual is
+    real state — dropping it at a restore boundary would silently lose the
+    deferred gradient mass."""
+    fl = _fl(rounds=6)
+    model_size = tree_size(MODEL.init(jax.random.PRNGKey(0)))
+    round_fn = make_round_fn(MODEL, fl, tdata, model_size)
+    state = init_sim_state(MODEL, fl, jax.random.PRNGKey(42))
+    assert state.ef_resid.shape == (N, model_size)
+
+    ref = state
+    for t in range(6):
+        ref, _ = round_fn(ref, jnp.int32(t))
+
+    half = state
+    for t in range(3):
+        half, _ = round_fn(half, jnp.int32(t))
+    ckpt = {"w": half.w, "lam": half.lam, "energy": half.energy,
+            "key": jax.random.key_data(half.key), "ef_resid": half.ef_resid,
+            "dl_energy": half.dl_energy}
+    save_checkpoint(str(tmp_path), 3, ckpt)
+    got = restore_checkpoint(str(tmp_path), jax.tree.map(np.asarray, ckpt))
+    resumed = half._replace(
+        w=jax.tree.map(jnp.asarray, got["w"]),
+        lam=jnp.asarray(got["lam"]),
+        energy=jnp.asarray(got["energy"]),
+        key=jax.random.wrap_key_data(jnp.asarray(got["key"])),
+        ef_resid=jnp.asarray(got["ef_resid"]),
+        dl_energy=jnp.asarray(got["dl_energy"]))
+    for t in range(3, 6):
+        resumed, _ = round_fn(resumed, jnp.int32(t))
+
+    for a, b in zip(jax.tree_util.tree_leaves(ref.w),
+                    jax.tree_util.tree_leaves(resumed.w), strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ref.ef_resid),
+                                  np.asarray(resumed.ef_resid))
+    np.testing.assert_array_equal(np.asarray(ref.energy),
+                                  np.asarray(resumed.energy))
+    # the memory is live by round 6 at density 0.2
+    assert float(jnp.abs(ref.ef_resid).sum()) > 0.0
+
+
+def test_density_one_recovers_analog(tdata):
+    """At density=1.0 the threshold is each row's min |coordinate|, every
+    coordinate is kept, the residual stays identically zero and the sparse
+    program equals analog — with the IDENTICAL AWGN realization (same
+    per-leaf streams) and the identical energy bill (the payload fraction
+    caps at 1)."""
+    fl = _fl("ca_afl", noise_std=1e-3)
+    ha = run_simulation(MODEL, replace(fl, transport="analog"), tdata, seed=3)
+    hs = run_simulation(MODEL, replace(fl, sparse_density=1.0), tdata, seed=3)
+    eps = float(np.finfo(np.float32).eps)
+    for name in ha._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(ha, name)), np.asarray(getattr(hs, name)),
+            err_msg=f"d1:{name}", rtol=64 * eps, atol=64 * eps)
+
+
+def test_sparse_run_defers_then_delivers(tdata):
+    """End-to-end sanity at density 0.2: the run is finite, cheaper on the
+    uplink ledger than analog, and still learns (error feedback keeps the
+    dropped mass in play instead of discarding it)."""
+    fl = _fl("fedavg", rounds=25)
+    hs = run_simulation(MODEL, fl, tdata, seed=3)
+    ha = run_simulation(MODEL, replace(fl, transport="analog"), tdata, seed=3)
+    assert np.isfinite(np.asarray(hs.avg_acc)).all()
+    # FedAvg schedules identically (uniform draw), so ledgers are comparable
+    np.testing.assert_array_equal(np.asarray(hs.num_scheduled),
+                                  np.asarray(ha.num_scheduled))
+    assert float(hs.energy[-1]) < 0.5 * float(ha.energy[-1])
+    assert float(hs.avg_acc[-1]) > 0.4 > float(hs.avg_acc[0])

@@ -12,8 +12,10 @@ delegates to the exact pre-existing calls); quantized at bits=32 matches
 analog to f32 eps with the identical AWGN realization; digital aggregation
 is the masked weighted mean with zero superposition noise; the sparse-K and
 population-sharded paths equal the dense reference for every transport ×
-{default, markov_fading, battery_constrained}; and a three-transport sweep
-compiles one executable per scheme with every knob traced.
+{default, markov_fading, battery_constrained}; and a four-transport sweep
+compiles one executable per scheme with every knob traced (the
+error-feedback ``sparse`` scheme's invariants get their own suite,
+``tests/test_sparse_transport.py``).
 """
 from dataclasses import replace
 
@@ -171,6 +173,53 @@ def test_digital_energy_zero_knobs_stay_finite():
 
 
 @pytest.mark.property
+def test_digital_energy_zero_rx_noise_not_free():
+    """Regression: rx_noise=0 made the Shannon SNR infinite, the rate
+    infinite and the airtime zero — digital uploads billed at exactly 0 J,
+    so digital cells dominated every Pareto front they appeared in. The
+    noise clamp keeps the rate (hence the bill) finite and positive."""
+    h = jnp.asarray([0.05, 1.0])
+    tp = TransportParams(tx_power=0.1, bandwidth=1e5, rx_noise=0.0)
+    e = np.asarray(digital_energy(h, 1000, tp))
+    assert np.isfinite(e).all() and (e > 0).all()
+    # a vanishing-but-positive noise must behave the same way (no knife edge)
+    e_tiny = np.asarray(digital_energy(
+        h, 1000, TransportParams(tx_power=0.1, bandwidth=1e5,
+                                 rx_noise=1e-30)))
+    assert np.isfinite(e_tiny).all() and (e_tiny > 0).all()
+
+
+@pytest.mark.property
+def test_quant_step_degenerate_bits_stay_finite(tdata):
+    """Regression: bits=0 gave 2^0 − 1 = 0 grid levels → Δ = max|x|/0 = inf
+    → NaN payloads after rounding. The level floor pins Δ finite on the
+    whole degenerate edge, and a traced bits-grid sweep crossing 0/1 stays
+    finite end-to-end (bits is a TRACED knob: one executable serves the
+    grid, so one poisoned cell would share its program with healthy ones).
+    The billed energy floors at the 1-bit payload — bits=0 must not upload
+    for free."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 64))
+    for bits in (0.0, 0.5, 1.0, 2.0):
+        step = np.asarray(quant_step(x, bits))
+        assert np.isfinite(step).all(), bits
+        q, _ = quantize_rows(x, jnp.arange(3), jax.random.PRNGKey(1), bits)
+        assert np.isfinite(np.asarray(q)).all(), bits
+    fl = _fl("fedavg", rounds=3)
+    specs = [(f"b{b}", replace(fl, transport="quantized", quant_bits=b))
+             for b in (0.0, 1.0, 4.0, 32.0)]
+    result = sweep.run_sweep(MODEL, tdata, specs, seeds=(3,))
+    s = result.summary(window=2)
+    for lbl in ("b0.0", "b1.0", "b4.0", "b32.0"):
+        assert np.isfinite(s[lbl]["energy"]), lbl
+        assert np.isfinite(s[lbl]["avg_acc"]), lbl
+        assert s[lbl]["energy"] > 0.0, lbl
+    # the bits=0 bill floors at exactly the 1-bit price
+    np.testing.assert_allclose(s["b0.0"]["energy"], s["b1.0"]["energy"],
+                               rtol=1e-6)
+    assert s["b1.0"]["energy"] < s["b32.0"]["energy"]
+
+
+@pytest.mark.property
 def test_deep_fade_guard_zero_channel_draw():
     """Regression: an exactly-zero channel used to give inf/NaN upload energy
     (1/h²), poisoning battery depletion and greedy scores. Energy is now
@@ -220,6 +269,39 @@ def test_quant_kernel_matches_reference():
     f(0.1, 3.0)  # same executable, different scalars
 
 
+def test_sparse_kernel_matches_reference():
+    """The fused compress-aggregate kernel: Pallas (interpret) == jnp oracle,
+    with traced noise_std/k scalars sharing one executable."""
+    from repro.kernels.aircomp.ops import sparse_aircomp_flat
+    from repro.core.transport import sparse_thresholds
+
+    key = jax.random.PRNGKey(9)
+    c, m = 7, 1536
+    x = jax.random.normal(key, (c, m))
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0])
+    thr = sparse_thresholds(x, 77)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    ref = sparse_aircomp_flat(x, w, thr, z, noise_std=0.3, k=5.0,
+                              use_pallas=False)
+    pal = sparse_aircomp_flat(x, w, thr, z, noise_std=0.3, k=5.0,
+                              use_pallas=True)  # interpret mode off-TPU
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # an all-zero payload row thresholds at 0, keeps itself and adds zeros
+    x0 = x.at[2].set(0.0)
+    thr0 = sparse_thresholds(x0, 77)
+    assert float(thr0[2]) == 0.0
+    out0 = sparse_aircomp_flat(x0, w, thr0, z, noise_std=0.0, k=5.0,
+                               use_pallas=True)
+    assert np.isfinite(np.asarray(out0)).all()
+    # traced scalars: no recompile across noise_std/k values
+    f = jax.jit(lambda ns, k: sparse_aircomp_flat(
+        x, w, thr, z, noise_std=ns, k=k, use_pallas=True))
+    np.testing.assert_allclose(np.asarray(f(0.3, 5.0)), np.asarray(pal),
+                               rtol=1e-6)
+    f(0.1, 3.0)  # same executable, different scalars
+
+
 # ---------------------------------------------------------------------------
 # Differential pins: analog bit-identity, bits=32 ≈ analog, digital == mean
 # ---------------------------------------------------------------------------
@@ -234,7 +316,7 @@ def test_analog_is_invariant_to_transport_knobs(tdata, method):
     base = run_simulation(MODEL, _fl(method), tdata, seed=3)
     tweaked = run_simulation(
         MODEL, _fl(method, quant_bits=3.0, tx_power=9.9, ofdma_bandwidth=1.0,
-                   rx_noise=123.0), tdata, seed=3)
+                   rx_noise=123.0, sparse_density=0.5), tdata, seed=3)
     _hist_equal(base, tweaked, msg=f"analog-knobs:{method}")
 
 
@@ -310,7 +392,7 @@ def test_digital_trajectories_equal_analog_sans_energy(tdata):
 
 @pytest.mark.parametrize("scenario", ("default", "markov_fading",
                                       "battery_constrained"))
-@pytest.mark.parametrize("transport_name", ("quantized", "digital"))
+@pytest.mark.parametrize("transport_name", ("quantized", "digital", "sparse"))
 def test_sparse_matches_dense_per_transport(tdata, transport_name, scenario):
     """The hot-path contract holds per transport: the selected-K gather
     round equals the dense [N, model] reference (control plane exact, model
@@ -332,7 +414,8 @@ def test_sparse_matches_dense_per_transport(tdata, transport_name, scenario):
                            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
 @pytest.mark.parametrize("scenario", ("default", "markov_fading",
                                       "battery_constrained"))
-@pytest.mark.parametrize("transport_name", ("analog", "quantized", "digital"))
+@pytest.mark.parametrize("transport_name",
+                         ("analog", "quantized", "digital", "sparse"))
 def test_sharded_matches_dense_per_transport(tdata, transport_name, scenario):
     """Population sharding per transport: client-mesh rounds equal the dense
     reference (psum == eq. (10); quantized streams addressed by GLOBAL id,
@@ -354,9 +437,10 @@ def test_sharded_matches_dense_per_transport(tdata, transport_name, scenario):
 
 
 def test_sweep_compiles_one_executable_per_transport(tdata):
-    """A three-transport grid is three compilation groups (the scheme is
-    structural), while a bits/power sub-grid WITHIN a scheme rides the vmap
-    axis of one executable; the analog cell equals run_simulation exactly."""
+    """A four-transport grid is four compilation groups (the scheme is
+    structural), while a bits/power/downlink sub-grid WITHIN a scheme rides
+    the vmap axis of one executable; the analog cell equals run_simulation
+    exactly."""
     fl = _fl("ca_afl", rounds=4)
     specs = [
         ("analog", fl),
@@ -364,13 +448,27 @@ def test_sweep_compiles_one_executable_per_transport(tdata):
         ("quantized_b8", replace(fl, transport="quantized", quant_bits=8.0)),
         ("digital", replace(fl, transport="digital")),
         ("digital_hp", replace(fl, transport="digital", tx_power=0.5)),
+        ("sparse", replace(fl, transport="sparse")),
+        ("sparse_dl", replace(fl, transport="sparse", dl_rx_power=1e-4)),
     ]
     sweep.reset_trace_log()
     result = sweep.run_sweep(MODEL, tdata, specs, seeds=(3,))
-    assert sweep.trace_count() == 3  # analog + quantized + digital
+    # analog + quantized + digital + sparse (dl_rx_power stays traced)
+    assert sweep.trace_count() == 4
     ref = run_simulation(MODEL, fl, tdata, seed=3)
     got = jax.tree.map(lambda x: x[0], result.history("analog"))
     _hist_equal(got, ref, msg="sweep-analog")
     s = result.summary(window=2)
     assert s["quantized_b4"]["energy"] < s["analog"]["energy"]
     assert s["digital"]["energy"] > s["analog"]["energy"]
+    # the sparse uplink uploads ~density of the payload: cheapest of all
+    assert s["sparse"]["energy"] < s["quantized_b4"]["energy"]
+    # the downlink ledger is additive-only: identical trajectories, larger
+    # total energy, and the share is exactly the dl_energy column
+    assert s["sparse_dl"]["dl_energy"] > 0.0
+    assert s["sparse"]["dl_energy"] == 0.0
+    np.testing.assert_allclose(
+        s["sparse_dl"]["energy"] - s["sparse_dl"]["dl_energy"],
+        s["sparse"]["energy"], rtol=1e-5)
+    np.testing.assert_allclose(s["sparse_dl"]["avg_acc"],
+                               s["sparse"]["avg_acc"], rtol=1e-6)
